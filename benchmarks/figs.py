@@ -1,0 +1,174 @@
+"""Laptop-scale analogues of the paper's Figures 10-13.
+
+The absolute numbers differ from the 2013 Dell cluster, but each experiment
+preserves the paper's *shape*: what is varied, what is measured, and which
+effect must appear (alignment gap, concurrency scaling, write collapse,
+write-path offload).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.annotations import Annotation, AnnotationProject
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import CutoutStats, cutout, ingest, write_cutout
+from repro.core.store import CuboidStore, DirectoryBackend, MemoryBackend
+
+CUBOID = (64, 64, 16)
+
+
+def _make_volume(shape=(256, 256, 64), seed=0, entropy="high"):
+    rng = np.random.default_rng(seed)
+    if entropy == "high":     # EM-like: compresses <10% (paper §5)
+        return rng.integers(0, 255, size=shape, dtype=np.uint8)
+    vol = np.zeros(shape, dtype=np.uint8)   # annotation-like: low entropy
+    vol[::4, ::4] = rng.integers(0, 8, size=(shape[0] // 4,
+                                             shape[1] // 4, shape[2]))
+    return vol
+
+
+def _store(backend=None, shape=(256, 256, 64), dtype="uint8"):
+    spec = DatasetSpec(name="bench", volume_shape=shape, dtype=dtype,
+                       base_cuboid=CUBOID)
+    return CuboidStore(spec, backend=backend)
+
+
+def _timed_cutouts(store, boxes, n_workers=1) -> Tuple[float, float]:
+    """Returns (seconds, MB moved)."""
+    total = sum(float(np.prod([h - l for l, h in zip(lo, hi)]))
+                for lo, hi in boxes)
+    t0 = time.perf_counter()
+    if n_workers == 1:
+        for lo, hi in boxes:
+            cutout(store, 0, lo, hi)
+    else:
+        with cf.ThreadPoolExecutor(max_workers=n_workers) as ex:
+            list(ex.map(lambda b: cutout(store, 0, *b), boxes))
+    return time.perf_counter() - t0, total / 1e6
+
+
+def fig10_cutout_throughput() -> List[Dict]:
+    """Throughput vs cutout size x {memory-aligned, disk-aligned,
+    unaligned}. Expected shape (paper): aligned-in-memory > disk-aligned >
+    unaligned; throughput grows with size as fixed costs amortize."""
+    vol = _make_volume()
+    mem_store = _store()
+    ingest(mem_store, 0, vol)
+    tmp = tempfile.mkdtemp(prefix="ocp_bench_")
+    disk_store = _store(DirectoryBackend(tmp))
+    ingest(disk_store, 0, vol)
+    rng = np.random.default_rng(1)
+    rows = []
+    for size in (32, 64, 128):
+        n_req = max(2, 16 // (size // 32))
+        aligned, unaligned = [], []
+        for _ in range(n_req):
+            gx = rng.integers(0, (256 - size) // 64 + 1) * 64
+            gz = rng.integers(0, max(1, (64 - size // 4) // 16)) * 16
+            aligned.append(((gx, gx, gz),
+                            (gx + size, gx + size, gz + size // 4)))
+            ox = int(rng.integers(1, 250 - size))
+            oz = int(rng.integers(1, 60 - size // 4))
+            unaligned.append(((ox, ox, oz),
+                              (ox + size, ox + size, oz + size // 4)))
+        for label, store, boxes in [
+                ("aligned_memory", mem_store, aligned),
+                ("aligned_disk", disk_store, aligned),
+                ("unaligned", mem_store, unaligned)]:
+            dt, mb = _timed_cutouts(store, boxes)
+            rows.append({"name": f"fig10/{label}/{size}",
+                         "us_per_call": dt / len(boxes) * 1e6,
+                         "derived": f"{mb / dt:.1f}MBps"})
+    return rows
+
+
+def fig11_concurrency() -> List[Dict]:
+    """Throughput vs #parallel requests (paper: scales past core count,
+    degrades with oversubscription)."""
+    vol = _make_volume()
+    store = _store()
+    ingest(store, 0, vol)
+    rng = np.random.default_rng(2)
+    boxes = []
+    for _ in range(32):
+        x = int(rng.integers(0, 192))
+        z = int(rng.integers(0, 48))
+        boxes.append(((x, x, z), (x + 64, x + 64, z + 16)))
+    rows = []
+    for workers in (1, 2, 4, 8):
+        dt, mb = _timed_cutouts(store, boxes, n_workers=workers)
+        rows.append({"name": f"fig11/parallel/{workers}",
+                     "us_per_call": dt / len(boxes) * 1e6,
+                     "derived": f"{mb / dt:.1f}MBps"})
+    return rows
+
+
+def fig12_annotation_write() -> List[Dict]:
+    """Annotation write throughput vs region size (paper: write path is
+    read-modify-write + index maintenance; throughput collapses for large
+    regions relative to reads)."""
+    spec = DatasetSpec(name="img", volume_shape=(256, 256, 64),
+                       dtype="uint8", base_cuboid=CUBOID)
+    rows = []
+    rng = np.random.default_rng(3)
+    for size in (32, 64, 128):
+        proj = AnnotationProject("w", spec)
+        labels = (rng.integers(1, 6, size=(size, size, size // 4))
+                  .astype(np.uint32))      # >90% labeled, low entropy
+        mb = labels.nbytes / 1e6
+        t0 = time.perf_counter()
+        a = proj.meta.create()
+        proj.write(0, (0, 0, 0), np.where(labels > 0,
+                                          np.uint32(a.ann_id), 0))
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"fig12/annotation_write/{size}",
+                     "us_per_call": dt * 1e6,
+                     "derived": f"{mb / dt:.1f}MBps_uncompressed"})
+    # read-back comparison at one size (paper: writes << reads)
+    t0 = time.perf_counter()
+    proj.read(0, (0, 0, 0), (128, 128, 32))
+    dt_read = time.perf_counter() - t0
+    rows.append({"name": "fig12/read_same_region/128",
+                 "us_per_call": dt_read * 1e6,
+                 "derived": f"{(128 * 128 * 32 * 4 / 1e6) / dt_read:.1f}MBps"})
+    return rows
+
+
+def fig13_write_paths() -> List[Dict]:
+    """Small random synapse writes: dedicated write path (SSD node) vs
+    writing through the read path (database node). Paper: the SSD node
+    sustains >150% of the DB node on random small writes."""
+    spec = DatasetSpec(name="img", volume_shape=(256, 256, 64),
+                       dtype="uint8", base_cuboid=CUBOID)
+    rng = np.random.default_rng(4)
+
+    def synapse_batch(n=64):
+        out = []
+        for _ in range(n):
+            pos = (int(rng.integers(0, 250)), int(rng.integers(0, 250)),
+                   int(rng.integers(0, 60)))
+            vol = np.ones((4, 4, 2), np.uint32)
+            out.append((Annotation(0, ann_type="synapse",
+                                   confidence=float(rng.random())),
+                        pos, vol))
+        return out
+
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="ocp_f13_")
+    for label, kwargs in [
+            ("db_node", dict(backend=DirectoryBackend(tmp))),
+            ("ssd_node", dict(write_path_backend=MemoryBackend()))]:
+        proj = AnnotationProject("s", spec, **kwargs)
+        batch = synapse_batch()
+        t0 = time.perf_counter()
+        proj.batch_write_objects(0, batch)
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"fig13/{label}",
+                     "us_per_call": dt / len(batch) * 1e6,
+                     "derived": f"{len(batch) / dt:.1f}_objects_per_s"})
+    return rows

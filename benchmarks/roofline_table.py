@@ -1,0 +1,72 @@
+"""Render dryrun_all.json as the EXPERIMENTS.md §Roofline markdown table.
+
+No jax import — pure JSON formatting.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [dryrun_all.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 0.01:
+        return f"{x:.2f}"
+    return f"{x:.1e}"
+
+
+def _gb(x) -> str:
+    return f"{x / 1e9:.2f}" if x else "?"
+
+
+def render(cells, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound |"
+        " useful | roofline | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for c in cells:
+        if c["mesh"] != mesh:
+            continue
+        if c.get("status") == "skipped":
+            skips.append(f"{c['arch']} × {c['shape']}")
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | FAILED | | | | "
+                         f"| | |")
+            continue
+        r = c["roofline"]
+        m = c.get("memory_analysis", {})
+        peak = (m.get("argument_bytes") or 0) + (m.get("temp_bytes") or 0)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {_fmt(r['t_compute_s'])} "
+            f"| {_fmt(r['t_memory_s'])} | {_fmt(r['t_collective_s'])} "
+            f"| {r['bottleneck'][:4]} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {_gb(peak)} |")
+    out = "\n".join(lines)
+    if skips:
+        out += ("\n\nSkipped (full-attention at 524k context, DESIGN.md "
+                "§5): " + ", ".join(skips))
+    return out
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "dryrun_all.json")
+    with open(path) as f:
+        cells = json.load(f)
+    for mesh in ("16x16", "2x16x16"):
+        print(f"### mesh {mesh}\n")
+        print(render(cells, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

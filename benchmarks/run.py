@@ -1,0 +1,68 @@
+"""Benchmark driver: one section per paper table/figure + kernel/roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+Roofline rows are read from dryrun_results.json when present (produced by
+``python -m repro.launch.dryrun --all --mesh both --out dryrun_results.json``).
+"""
+import json
+import os
+import sys
+
+
+def roofline_rows():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    path = next((p for p in (os.path.join(root, "dryrun_all.json"),
+                             os.path.join(root, "dryrun_results.json"))
+                 if os.path.exists(p)), None)
+    if path is None:
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "derived": "run_launch.dryrun_first"}]
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        r = c["roofline"]
+        t_step = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append({
+            "name": f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            "us_per_call": t_step * 1e6,
+            "derived": (f"bottleneck={r['bottleneck']}"
+                        f";frac={r['roofline_fraction']:.3f}"
+                        f";useful={r['useful_ratio']:.2f}"),
+        })
+    return rows
+
+
+def main() -> None:
+    from . import figs, kernels_bench
+
+    sections = [
+        ("fig10", figs.fig10_cutout_throughput),
+        ("fig11", figs.fig11_concurrency),
+        ("fig12", figs.fig12_annotation_write),
+        ("fig13", figs.fig13_write_paths),
+        ("curves", kernels_bench.curve_panel_traffic),
+        ("attn", kernels_bench.attention_paths),
+        ("ssd", kernels_bench.ssd_duality),
+        ("moe", kernels_bench.moe_padding_elision),
+        ("roofline", roofline_rows),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, fn in sections:
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"{row['derived']}")
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{label}/ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily.
+
+Uses the reduced gemma-2b config (MQA + GeGLU) on CPU; the identical step
+function is what the decode_32k dry-run lowers for the production mesh.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    serve_main(["--arch", "gemma-2b", "--smoke", "--batch", "4",
+                "--prompt-len", "12", "--gen", "12"])

@@ -1,0 +1,67 @@
+"""The paper's driving workload end-to-end (§2, Fig 7): parallel synapse
+detection over cutouts, with annotation writes to a separated write path,
+low-resolution large-structure masking, and spatial analysis of results.
+
+Run:  PYTHONPATH=src python examples/synapse_pipeline.py
+"""
+import numpy as np
+
+from repro.core.annotations import AnnotationProject
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import build_hierarchy, ingest
+from repro.core.store import CuboidStore, MemoryBackend
+from repro.vision import run_parallel_detection
+
+
+def synthetic_cortex(shape=(128, 128, 32), n_synapses=24, seed=7):
+    rng = np.random.default_rng(seed)
+    vol = rng.normal(100, 4, size=shape).astype(np.float32)
+    centers = []
+    for _ in range(n_synapses):
+        c = [int(rng.integers(8, s - 8)) for s in shape]
+        centers.append(c)
+        xx, yy, zz = np.ogrid[:shape[0], :shape[1], :shape[2]]
+        d2 = (xx - c[0]) ** 2 + (yy - c[1]) ** 2 + ((zz - c[2]) * 2) ** 2
+        vol += 90.0 * np.exp(-d2 / 9.0)
+    # one big bright "blood vessel" that must be masked out (paper §3.1)
+    vol[40:90, 40:50, :] += 60.0
+    return vol, centers
+
+
+def main():
+    vol, centers = synthetic_cortex()
+    spec = DatasetSpec(name="cortex", volume_shape=vol.shape,
+                       dtype="float32", n_resolutions=2,
+                       base_cuboid=(32, 32, 16))
+    store = CuboidStore(spec)
+    ingest(store, 0, vol)
+    build_hierarchy(store)          # resolution pyramid (paper §3.1)
+
+    # annotations go to a dedicated write path ("SSD node", paper §4.1)
+    proj = AnnotationProject("detections", spec,
+                             write_path_backend=MemoryBackend())
+    n = run_parallel_detection(store, proj, r=0, tile=(64, 64, 32),
+                               n_workers=4, threshold=2.0, min_voxels=4,
+                               batch_size=40, lowres_level=1)
+    print(f"wrote {n} synapse annotations "
+          f"(planted {len(centers)}; vessel region masked)")
+    print(f"write path absorbed "
+          f"{proj.store.write_stats.writes} cuboid writes; "
+          f"read path served {proj.store.read_stats.reads} reads")
+
+    # spatial analysis (paper §2): distances between detections
+    ids = proj.meta.query(("ann_type", "eq", "synapse"))
+    cents = np.array([proj.centroid(i, 0) for i in ids[:12]])
+    if len(cents) >= 2:
+        d = np.linalg.norm(cents[:, None] - cents[None], axis=-1)
+        np.fill_diagonal(d, np.inf)
+        print(f"nearest-neighbor distances: "
+              f"min {d.min():.1f}, median {np.median(d.min(1)):.1f} voxels")
+    hi = proj.meta.query(("ann_type", "eq", "synapse"),
+                         ("confidence", "geq", 0.6))
+    print(f"{len(hi)}/{len(ids)} detections above confidence 0.6")
+    proj.store.migrate()            # cool the project back to disk nodes
+
+
+if __name__ == "__main__":
+    main()

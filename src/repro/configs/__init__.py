@@ -1,0 +1,41 @@
+"""Assigned-architecture registry: one module per arch (``--arch <id>``)."""
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "smollm_135m",
+    "minitron_8b",
+    "llama3_405b",
+    "gemma_2b",
+    "arctic_480b",
+    "granite_moe_1b_a400m",
+    "internvl2_76b",
+    "recurrentgemma_2b",
+    "seamless_m4t_medium",
+    "mamba2_370m",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def canonical(arch: str) -> str:
+    a = arch.replace("-", "_")
+    if a not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return a
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __package__)
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __package__)
+    return mod.smoke()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,5 @@
+"""Core paper contribution: Morton-indexed cuboid spatial database.
+
+See DESIGN.md §1 for the mapping from paper mechanisms (C1-C8) to modules.
+"""
+from . import morton, cuboid, store, cutout, spatial_index, annotations  # noqa: F401

@@ -1,0 +1,209 @@
+"""The cutout engine (paper §4.2, C2): arbitrary sub-volume read/write.
+
+A *cutout* specifies a resolution and a range in every dimension; the engine
+decomposes the box into Morton runs of cuboids (few long sequential reads),
+assembles the dense array in memory, and returns it. Unaligned requests are
+rounded up to cuboid boundaries and trimmed (the paper measures exactly this
+cost in Fig 10). Writes apply a conflict discipline per voxel (paper §3.2):
+``overwrite`` / ``preserve`` / ``exception``.
+
+Lower-dimensional projections (§3.3 tiles) are cutouts with singleton dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import morton
+from .cuboid import CuboidGrid
+from .store import CuboidStore
+
+Box = Tuple[Sequence[int], Sequence[int]]  # (lo, hi) half-open
+
+
+@dataclasses.dataclass
+class CutoutStats:
+    cuboids_read: int = 0
+    runs: int = 0
+    bytes_assembled: int = 0
+    bytes_discarded: int = 0   # read-and-discarded due to misalignment
+
+
+def _aligned_box(grid: CuboidGrid, lo, hi):
+    alo = [l - l % c for l, c in zip(lo, grid.cuboid_shape)]
+    ahi = [min(-(-h // c) * c, g * c) for h, c, g in
+           zip(hi, grid.cuboid_shape, grid.grid_shape)]
+    return alo, ahi
+
+
+def cutout(store: CuboidStore, r: int, lo: Sequence[int], hi: Sequence[int],
+           channel: int = 0, stats: Optional[CutoutStats] = None,
+           max_runs: Optional[int] = None) -> np.ndarray:
+    """Read the dense sub-volume [lo, hi) at resolution ``r``."""
+    grid = store.spec.grid(r)
+    lo, hi = grid.clamp_box(lo, hi)
+    if any(l >= h for l, h in zip(lo, hi)):
+        return np.zeros([max(0, h - l) for l, h in zip(lo, hi)],
+                        dtype=np.dtype(store.spec.dtype))
+    runs = grid.box_to_runs(lo, hi, max_runs=max_runs)
+    alo, ahi = _aligned_box(grid, lo, hi)
+    buf = np.zeros([h - l for l, h in zip(alo, ahi)],
+                   dtype=np.dtype(store.spec.dtype))
+    cs = grid.cuboid_shape
+    n_read = 0
+    for start, stop in runs:
+        blocks = store.read_run(r, start, stop, channel)
+        for m, block in zip(range(start, stop), blocks):
+            origin = grid.cuboid_origin(m)
+            # runs may cover morton cells outside the box (coarsening) or
+            # outside the volume (pow2 padding): skip those.
+            if any(o >= v for o, v in zip(origin, grid.volume_shape)):
+                continue
+            if any(o + c <= l or o >= h
+                   for o, c, l, h in zip(origin, cs, alo, ahi)):
+                continue
+            sl = tuple(slice(o - a, o - a + c)
+                       for o, a, c in zip(origin, alo, cs))
+            view_shape = buf[sl].shape
+            buf[sl] = block[tuple(slice(0, s) for s in view_shape)]
+            n_read += 1
+    trim = tuple(slice(l - a, h - a) for l, h, a in zip(lo, hi, alo))
+    out = buf[trim]
+    if stats is not None:
+        stats.cuboids_read += n_read
+        stats.runs += len(runs)
+        stats.bytes_assembled += out.nbytes
+        stats.bytes_discarded += buf.nbytes - out.nbytes
+    return np.ascontiguousarray(out)
+
+
+WriteDiscipline = str  # 'overwrite' | 'preserve' | 'exception'
+
+
+def write_cutout(store: CuboidStore, r: int, lo: Sequence[int],
+                 data: np.ndarray, channel: int = 0,
+                 discipline: WriteDiscipline = "overwrite",
+                 on_conflict: Optional[Callable[[int, Tuple[int, ...],
+                                                 np.ndarray, np.ndarray],
+                                                None]] = None) -> None:
+    """Write dense ``data`` at offset ``lo`` (read-modify-write per cuboid).
+
+    Mirrors the paper's annotation upload path (§5/Fig 12): (1) read prior
+    cuboids, (2) resolve per-voxel conflicts by ``discipline``, (3) write
+    back.  ``on_conflict(morton, origin, old_block, new_block)`` is invoked
+    for ``exception`` discipline so the annotation layer can record
+    multi-label exceptions (paper §3.2).
+    """
+    grid = store.spec.grid(r)
+    hi = [l + s for l, s in zip(lo, data.shape)]
+    clo, chi = grid.clamp_box(lo, hi)
+    if any(l >= h for l, h in zip(clo, chi)):
+        return
+    runs = grid.box_to_runs(clo, chi)
+    cs = grid.cuboid_shape
+    for start, stop in runs:
+        for m in range(start, stop):
+            origin = grid.cuboid_origin(m)
+            if any(o >= v for o, v in zip(origin, grid.volume_shape)):
+                continue
+            if any(o + c <= l or o >= h
+                   for o, c, l, h in zip(origin, cs, clo, chi)):
+                continue
+            block = store.read_cuboid(r, m, channel)
+            # overlap of this cuboid with the data box, in both frames
+            b_lo = [max(0, l - o) for l, o in zip(clo, origin)]
+            b_hi = [min(c, h - o) for c, h, o in zip(cs, chi, origin)]
+            d_lo = [o + bl - l for o, bl, l in zip(origin, b_lo, lo)]
+            d_hi = [o + bh - l for o, bh, l in zip(origin, b_hi, lo)]
+            bsl = tuple(slice(a, b) for a, b in zip(b_lo, b_hi))
+            dsl = tuple(slice(a, b) for a, b in zip(d_lo, d_hi))
+            new = data[dsl]
+            old = block[bsl]
+            if discipline == "overwrite":
+                merged = np.where(new != 0, new, old)
+            elif discipline == "preserve":
+                merged = np.where(old != 0, old, new)
+            elif discipline == "exception":
+                merged = np.where(old != 0, old, new)
+                if on_conflict is not None:
+                    conflict = (old != 0) & (new != 0) & (old != new)
+                    if conflict.any():
+                        # report in full-cuboid frame so flat voxel offsets
+                        # are stable keys for the exceptions list (§3.2)
+                        old_full = np.zeros(cs, dtype=block.dtype)
+                        new_full = np.zeros(cs, dtype=block.dtype)
+                        old_full[bsl] = old * conflict
+                        new_full[bsl] = new * conflict
+                        on_conflict(m, tuple(origin), old_full, new_full)
+            else:
+                raise ValueError(f"unknown discipline {discipline!r}")
+            block = block.copy()
+            block[bsl] = merged.astype(block.dtype)
+            store.write_cuboid(r, m, block, channel)
+
+
+def project(store: CuboidStore, r: int, lo: Sequence[int],
+            hi: Sequence[int], axis: int, reduce: str = "slice",
+            channel: int = 0) -> np.ndarray:
+    """Lower-dimensional projection (paper §3.3: dynamic tile building).
+
+    ``slice`` takes the first plane along ``axis`` (a tile request);
+    ``max``/``mean`` reduce along it (e.g. MIP renderings). The engine reads
+    3-d cuboid runs and discards what the projection does not need — this is
+    exactly the read-amplification trade the paper accepts to avoid storing
+    redundant tile stacks.
+    """
+    vol = cutout(store, r, lo, hi, channel)
+    if reduce == "slice":
+        return np.take(vol, 0, axis=axis)
+    if reduce == "max":
+        return vol.max(axis=axis)
+    if reduce == "mean":
+        return vol.mean(axis=axis).astype(vol.dtype)
+    raise ValueError(f"unknown reduce {reduce!r}")
+
+
+def batch_cutout(store: CuboidStore, r: int,
+                 boxes: List[Box], channel: int = 0) -> List[np.ndarray]:
+    """Batch interface (paper §4.2): amortize fixed costs over requests."""
+    return [cutout(store, r, lo, hi, channel) for lo, hi in boxes]
+
+
+def ingest(store: CuboidStore, r: int, volume: np.ndarray,
+           channel: int = 0, offset: Optional[Sequence[int]] = None) -> None:
+    """Bulk-load a dense volume (instrument → store ingest path)."""
+    off = list(offset or [0] * volume.ndim)
+    write_cutout(store, r, off, volume, channel, discipline="overwrite")
+
+
+def build_hierarchy(store: CuboidStore, channel: int = 0,
+                    labels: bool = False) -> None:
+    """Propagate level r -> r+1 for the whole dataset (background job, §3.2).
+
+    Image data average-pools the scaled dims; label data stride-samples so
+    identifiers survive (no blending of ids).
+    """
+    from .cuboid import downsample_block, downsample_labels
+    spec = store.spec
+    for r in range(spec.n_resolutions - 1):
+        src, dst = spec.grid(r), spec.grid(r + 1)
+        # iterate destination cuboids; pull the source region for each
+        for m in range(dst.n_cells):
+            origin = dst.cuboid_origin(m)
+            if any(o >= v for o, v in zip(origin, dst.volume_shape)):
+                continue
+            dhi = [min(o + c, v) for o, c, v in
+                   zip(origin, dst.cuboid_shape, dst.volume_shape)]
+            # source box: scale up the scaled dims by 2
+            slo = [o * 2 if d in spec.scaled_dims else o
+                   for d, o in enumerate(origin)]
+            shi = [h * 2 if d in spec.scaled_dims else h
+                   for d, h in enumerate(dhi)]
+            block = cutout(store, r, slo, shi, channel)
+            if not block.any():
+                continue
+            down = (downsample_labels(block, spec.scaled_dims) if labels
+                    else downsample_block(block, spec.scaled_dims))
+            write_cutout(store, r + 1, list(origin), down, channel)

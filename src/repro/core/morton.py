@@ -1,0 +1,269 @@
+"""N-dimensional Morton (z-order) space-filling curve.
+
+Faithful to OCP (Burns et al., SSDBM'13) §3: cuboids are assigned indexes by
+bit-interleaving their per-dimension offsets.  We support *unequal* per-dim
+bit widths (anisotropic grids: e.g. a 2^10 x 2^10 x 2^6 cuboid grid) by
+skipping exhausted dimensions during interleave, so the index stays dense in
+[0, prod(2^bits)).  Properties preserved (and property-tested):
+
+  * encode/decode are bijective on the grid,
+  * the index is non-decreasing in every dimension (paper: "cube addresses
+    are strictly non-decreasing in each dimension so that the index works on
+    subspaces"),
+  * any power-of-two aligned subregion is contiguous in the index,
+  * `range_decompose` covers an axis-aligned box with a minimal set of
+    contiguous index runs (paper: cutouts become few sequential I/Os).
+
+Everything here is pure numpy (host-side index math); `morton_decode_traced`
+is a jnp variant usable inside jitted code / Pallas index maps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+Runs = List[Tuple[int, int]]  # half-open [start, stop) morton-index runs
+
+
+@functools.lru_cache(maxsize=None)
+def bit_placement(bits: Tuple[int, ...]) -> Tuple[Tuple[int, int], ...]:
+    """Output-bit layout for interleaving dims with per-dim bit widths.
+
+    Returns a tuple of (dim, src_bit) ordered from LSB (position 0) to MSB.
+    Round-robin across dims level by level; dims with fewer bits drop out at
+    higher levels, keeping the code dense.
+    """
+    placement = []
+    for level in range(max(bits) if bits else 0):
+        for dim, b in enumerate(bits):
+            if level < b:
+                placement.append((dim, level))
+    return tuple(placement)
+
+
+def grid_bits(grid_shape: Sequence[int]) -> Tuple[int, ...]:
+    """Per-dim bit widths for a cuboid-grid shape (rounded up to pow2)."""
+    out = []
+    for s in grid_shape:
+        if s <= 0:
+            raise ValueError(f"grid dim must be positive, got {grid_shape}")
+        out.append(int(np.ceil(np.log2(s))) if s > 1 else 0)
+    return tuple(out)
+
+
+def morton_encode(coords, bits: Tuple[int, ...]):
+    """Vectorized Morton encode. coords: (..., d) int array -> (...) int64."""
+    coords = np.asarray(coords, dtype=np.int64)
+    placement = bit_placement(bits)
+    out = np.zeros(coords.shape[:-1], dtype=np.int64)
+    for pos, (dim, src_bit) in enumerate(placement):
+        out |= ((coords[..., dim] >> src_bit) & 1) << pos
+    return out
+
+
+def morton_decode(idx, bits: Tuple[int, ...]):
+    """Vectorized Morton decode. idx: (...) int -> (..., d) int64."""
+    idx = np.asarray(idx, dtype=np.int64)
+    placement = bit_placement(bits)
+    out = np.zeros(idx.shape + (len(bits),), dtype=np.int64)
+    for pos, (dim, src_bit) in enumerate(placement):
+        out[..., dim] |= ((idx >> pos) & 1) << src_bit
+    return out
+
+
+def morton_decode_traced(idx, bits: Tuple[int, ...]):
+    """jnp-traceable decode of a scalar/array morton index -> tuple of coords.
+
+    Usable inside jit / Pallas ``index_map`` (pure bit ops on traced ints).
+    """
+    import jax.numpy as jnp
+
+    placement = bit_placement(bits)
+    coords = [jnp.zeros_like(idx) for _ in bits]
+    for pos, (dim, src_bit) in enumerate(placement):
+        coords[dim] = coords[dim] | (((idx >> pos) & 1) << src_bit)
+    return tuple(coords)
+
+
+def total_bits(bits: Tuple[int, ...]) -> int:
+    return int(sum(bits))
+
+
+def range_decompose(lo: Sequence[int], hi: Sequence[int],
+                    bits: Tuple[int, ...], max_runs: int | None = None) -> Runs:
+    """Decompose the axis-aligned box [lo, hi) into contiguous Morton runs.
+
+    Recursive descent over the implicit 2^d tree defined by the interleave
+    layout: at output bit position p (MSB→LSB) the curve splits the current
+    power-of-two cell in half along ``placement[p]``'s dimension.  Cells
+    fully inside the box emit one run; disjoint cells prune; partial cells
+    recurse.  Adjacent runs merge, so aligned boxes come back as ONE run
+    (paper §3: "any power-of-two aligned subregion is wholly contiguous").
+
+    ``max_runs``: optional coarsening — if the exact decomposition would
+    exceed this, greedily merge nearest runs (reading + discarding a little
+    extra data, like rounding a cutout up to cuboid boundaries).
+    """
+    lo = [int(x) for x in lo]
+    hi = [int(x) for x in hi]
+    d = len(bits)
+    if len(lo) != d or len(hi) != d:
+        raise ValueError("lo/hi rank mismatch with bits")
+    for dim in range(d):
+        if not (0 <= lo[dim] <= hi[dim] <= (1 << bits[dim])):
+            raise ValueError(
+                f"box [{lo},{hi}) out of grid range for bits={bits}")
+        if lo[dim] == hi[dim]:
+            return []
+
+    placement = bit_placement(bits)
+    nbits = len(placement)
+    runs: Runs = []
+
+    # Iterative DFS; state = (pos, start_index, cell_lo tuple). pos counts
+    # from the MSB side: output bit index = nbits - 1 - pos.
+    stack = [(0, 0, tuple(0 for _ in range(d)))]
+    while stack:
+        pos, start, cell_lo = stack.pop()
+        span = 1 << (nbits - pos)  # indices covered by this cell
+        # Cell extent per dim given remaining bits.
+        remaining = [0] * d
+        for p in range(pos, nbits):
+            dim, _ = placement[nbits - 1 - p]
+            remaining[dim] += 1
+        contained = True
+        disjoint = False
+        for dim in range(d):
+            c_lo = cell_lo[dim]
+            c_hi = c_lo + (1 << remaining[dim])
+            if c_hi <= lo[dim] or c_lo >= hi[dim]:
+                disjoint = True
+                break
+            if not (lo[dim] <= c_lo and c_hi <= hi[dim]):
+                contained = False
+        if disjoint:
+            continue
+        if contained or pos == nbits:
+            if runs and runs[-1][1] == start:
+                runs[-1] = (runs[-1][0], start + span)
+            else:
+                runs.append((start, start + span))
+            continue
+        dim, src_bit = placement[nbits - 1 - pos]
+        half = 1 << src_bit
+        hi_cell = list(cell_lo)
+        hi_cell[dim] += half
+        # Push child 1 first so child 0 pops first (curve order, enables
+        # the adjacent-run merge above).
+        stack.append((pos + 1, start + span // 2, tuple(hi_cell)))
+        stack.append((pos + 1, start, cell_lo))
+
+    if max_runs is not None and len(runs) > max_runs:
+        runs = coarsen_runs(runs, max_runs)
+    return runs
+
+
+def coarsen_runs(runs: Runs, max_runs: int) -> Runs:
+    """Merge nearest runs until len <= max_runs (reads extra, never less)."""
+    runs = sorted(runs)
+    while len(runs) > max_runs:
+        # find smallest gap
+        gaps = [(runs[i + 1][0] - runs[i][1], i) for i in range(len(runs) - 1)]
+        _, i = min(gaps)
+        runs[i:i + 2] = [(runs[i][0], runs[i + 1][1])]
+    return runs
+
+
+def runs_to_indices(runs: Runs) -> np.ndarray:
+    """Expand runs to a flat int64 array of morton indices (curve order)."""
+    if not runs:
+        return np.zeros((0,), dtype=np.int64)
+    return np.concatenate([np.arange(a, b, dtype=np.int64) for a, b in runs])
+
+
+def hilbert_decode_2d(t, order: int):
+    """Vectorized 2-d Hilbert curve decode: t -> (x, y) on a 2^order grid.
+
+    The paper (§3) notes the Hilbert curve has the best clustering
+    properties [Moon et al.] but picks Morton for simplicity. We provide
+    both: Hilbert's every-step-changes-one-coordinate property is exactly
+    what a capacity-1 block-reuse schedule (Pallas consecutive-DMA skip)
+    wants, while Morton needs a small LRU panel cache to win.
+    """
+    t = np.asarray(t, dtype=np.int64)
+    x = np.zeros_like(t)
+    y = np.zeros_like(t)
+    tt = t.copy()
+    for s in range(order):
+        rx = (tt >> 1) & 1
+        ry = (tt ^ rx) & 1
+        # rotate quadrant
+        swap = ry == 0
+        flip = swap & (rx == 1)
+        side = (1 << s)
+        x_f = np.where(flip, side - 1 - x, x)
+        y_f = np.where(flip, side - 1 - y, y)
+        x_r = np.where(swap, y_f, x_f)
+        y_r = np.where(swap, x_f, y_f)
+        x = x_r + rx * side
+        y = y_r + ry * side
+        tt >>= 2
+    return x, y
+
+
+def hilbert_decode_2d_traced(t, order: int):
+    """jnp-traceable 2-d Hilbert decode (usable in Pallas index maps)."""
+    import jax.numpy as jnp
+
+    x = jnp.zeros_like(t)
+    y = jnp.zeros_like(t)
+    tt = t
+    for s in range(order):
+        rx = (tt >> 1) & 1
+        ry = (tt ^ rx) & 1
+        swap = ry == 0
+        flip = swap & (rx == 1)
+        side = 1 << s
+        x_f = jnp.where(flip, side - 1 - x, x)
+        y_f = jnp.where(flip, side - 1 - y, y)
+        x_r = jnp.where(swap, y_f, x_f)
+        y_r = jnp.where(swap, x_f, y_f)
+        x = x_r + rx * side
+        y = y_r + ry * side
+        tt = tt >> 2
+    return x, y
+
+
+def partition_curve(n_cells: int, n_parts: int) -> List[Tuple[int, int]]:
+    """Partition [0, n_cells) of the curve into n_parts contiguous segments.
+
+    Paper §4.1 / Fig 4: sharding is implemented by partitioning the Morton
+    curve; each node owns one contiguous segment, so each node's data is
+    spatially compact and reads within a node stay sequential.
+    """
+    if n_parts <= 0:
+        raise ValueError("n_parts must be positive")
+    base, rem = divmod(n_cells, n_parts)
+    parts = []
+    start = 0
+    for i in range(n_parts):
+        size = base + (1 if i < rem else 0)
+        parts.append((start, start + size))
+        start += size
+    return parts
+
+
+def owner_of(idx, n_cells: int, n_parts: int):
+    """Vectorized owner lookup for morton index(es) under partition_curve."""
+    idx = np.asarray(idx, dtype=np.int64)
+    base, rem = divmod(n_cells, n_parts)
+    cutoff = (base + 1) * rem  # first `rem` parts have one extra cell
+    small = idx < cutoff
+    owner = np.where(
+        small,
+        idx // max(base + 1, 1),
+        rem + (idx - cutoff) // max(base, 1),
+    )
+    return owner

@@ -1,0 +1,71 @@
+"""Per-object sparse spatial index (paper §4.2, C7).
+
+The index maps annotation identifier -> list of Morton locations of the
+cuboids containing that object's voxels.  Maintenance is append-mostly and
+batched: a write transaction collects the cuboids newly touched per id and
+appends them in one operation.  Retrieval sorts the list into curve order so
+the object's voxels are read in a single sequential pass (paper Fig 9).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+import numpy as np
+
+from .cuboid import CuboidGrid
+
+
+class ObjectIndex:
+    def __init__(self):
+        self._idx: Dict[int, Set[int]] = {}
+        self._lock = threading.Lock()
+        self.append_batches = 0  # instrumentation (Fig 12 contention story)
+
+    def append_batch(self, updates: Dict[int, Iterable[int]]) -> None:
+        """One write transaction appends all new cuboid locations (§4.2)."""
+        with self._lock:
+            for ann_id, cubes in updates.items():
+                self._idx.setdefault(int(ann_id), set()).update(
+                    int(c) for c in cubes)
+            self.append_batches += 1
+
+    def remove(self, ann_id: int) -> None:
+        with self._lock:
+            self._idx.pop(int(ann_id), None)
+
+    def cuboids(self, ann_id: int) -> List[int]:
+        """Morton locations for an object, sorted into curve order."""
+        return sorted(self._idx.get(int(ann_id), ()))
+
+    def ids(self) -> List[int]:
+        return sorted(self._idx.keys())
+
+    def __contains__(self, ann_id: int) -> bool:
+        return int(ann_id) in self._idx
+
+    def runs(self, ann_id: int) -> List[Tuple[int, int]]:
+        """Collapse the sorted cuboid list into contiguous morton runs."""
+        out: List[Tuple[int, int]] = []
+        for m in self.cuboids(ann_id):
+            if out and out[-1][1] == m:
+                out[-1] = (out[-1][0], m + 1)
+            else:
+                out.append((m, m + 1))
+        return out
+
+    def bounding_box(self, ann_id: int,
+                     grid: CuboidGrid) -> Tuple[List[int], List[int]] | None:
+        """Cuboid-resolution bounding box from the index alone (no voxel IO).
+
+        Paper §4.2: a boundingbox query "queries a spatial index but does
+        not access voxel data".
+        """
+        cubes = self.cuboids(ann_id)
+        if not cubes:
+            return None
+        origins = np.array([grid.cuboid_origin(m) for m in cubes])
+        lo = origins.min(axis=0)
+        hi = origins.max(axis=0) + np.array(grid.cuboid_shape)
+        hi = np.minimum(hi, np.array(grid.volume_shape))
+        return list(int(x) for x in lo), list(int(x) for x in hi)

@@ -1,0 +1,255 @@
+"""Cuboid storage with separated read/write I/O paths (paper §4.1, C4).
+
+The paper directs *reads* to parallel disk arrays and *small random writes*
+to SSD nodes, and migrates write-hot databases back to the disk nodes when
+they cool. We reproduce the architecture: a `CuboidStore` is backed by a
+*read path* (bulk, sequential-friendly, the "database node") and an optional
+*write path* (an absorbing write-back store, the "SSD node"). Both paths are
+instrumented so the Fig 13 experiment (SSD vs DB small random writes) is a
+measurable property of the system rather than prose.
+
+Storage itself is a dict or directory of gzip-compressed cuboids keyed by
+(resolution, channel, morton_index). Lazy allocation: a missing cuboid reads
+as zeros and occupies no storage (paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+import zlib
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from .cuboid import DatasetSpec
+
+Key = Tuple[int, int, int]  # (resolution, channel, morton index)
+
+
+@dataclasses.dataclass
+class PathStats:
+    reads: int = 0
+    read_bytes: int = 0
+    writes: int = 0
+    write_bytes: int = 0
+    seeks: int = 0          # discontiguous accesses (run boundaries)
+    time_s: float = 0.0
+
+    def snapshot(self) -> "PathStats":
+        return dataclasses.replace(self)
+
+
+class Backend:
+    """Minimal KV backend for compressed cuboids."""
+
+    def get(self, key: Key) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def put(self, key: Key, blob: bytes) -> None:
+        raise NotImplementedError
+
+    def delete(self, key: Key) -> None:
+        raise NotImplementedError
+
+    def keys(self) -> Iterable[Key]:
+        raise NotImplementedError
+
+    def __contains__(self, key: Key) -> bool:
+        return self.get(key) is not None
+
+
+class MemoryBackend(Backend):
+    def __init__(self):
+        self._d: Dict[Key, bytes] = {}
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        return self._d.get(key)
+
+    def put(self, key, blob):
+        with self._lock:
+            self._d[key] = blob
+
+    def delete(self, key):
+        with self._lock:
+            self._d.pop(key, None)
+
+    def keys(self):
+        return list(self._d.keys())
+
+    def __contains__(self, key):
+        return key in self._d
+
+
+class DirectoryBackend(Backend):
+    """One file per cuboid, laid out r/channel/morton.bin.
+
+    Mirrors the paper's CATMAID re-layout (§3.3): grouping by resolution
+    first keeps each directory a single access plane and bounds dirsize.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: Key) -> str:
+        r, c, m = key
+        return os.path.join(self.root, str(r), str(c), f"{m:016x}.bin")
+
+    def get(self, key):
+        p = self._path(key)
+        if not os.path.exists(p):
+            return None
+        with open(p, "rb") as f:
+            return f.read()
+
+    def put(self, key, blob):
+        p = self._path(key)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = p + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, p)  # atomic
+
+    def delete(self, key):
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def keys(self):
+        for r in os.listdir(self.root):
+            rd = os.path.join(self.root, r)
+            if not os.path.isdir(rd):
+                continue
+            for c in os.listdir(rd):
+                cd = os.path.join(rd, c)
+                for fn in os.listdir(cd):
+                    if fn.endswith(".bin"):
+                        yield (int(r), int(c), int(fn[:-4], 16))
+
+    def __contains__(self, key):
+        return os.path.exists(self._path(key))
+
+
+def compress(arr: np.ndarray, level: int = 1) -> bytes:
+    """gzip/zlib cuboid compression (paper §3.2: labels compress well)."""
+    return zlib.compress(np.ascontiguousarray(arr).tobytes(), level)
+
+
+def decompress(blob: bytes, shape, dtype) -> np.ndarray:
+    return np.frombuffer(zlib.decompress(blob), dtype=dtype).reshape(shape)
+
+
+class CuboidStore:
+    """Cuboid store for one dataset: lazy, compressed, path-separated.
+
+    ``write_path_backend`` (the "SSD node") absorbs writes when attached;
+    reads consult it first (freshest), then the read path. ``migrate()``
+    flushes write-path contents into the read path — the paper's
+    dump-and-restore migration performed when a project cools down.
+    """
+
+    def __init__(self, spec: DatasetSpec,
+                 backend: Optional[Backend] = None,
+                 write_path_backend: Optional[Backend] = None,
+                 compression_level: int = 1):
+        self.spec = spec
+        self.read_backend = backend or MemoryBackend()
+        self.write_backend = write_path_backend
+        self.compression_level = compression_level
+        self.read_stats = PathStats()
+        self.write_stats = PathStats()
+        self._np_dtype = np.dtype(spec.dtype)
+        self._lock = threading.Lock()
+
+    # -- helpers ----------------------------------------------------------
+    def _cuboid_shape(self, r: int) -> Tuple[int, ...]:
+        return self.spec.grid(r).cuboid_shape
+
+    def _zeros(self, r: int) -> np.ndarray:
+        return np.zeros(self._cuboid_shape(r), dtype=self._np_dtype)
+
+    # -- single-cuboid ops -------------------------------------------------
+    def read_cuboid(self, r: int, m: int, channel: int = 0) -> np.ndarray:
+        key = (r, channel, m)
+        t0 = time.perf_counter()
+        blob = None
+        if self.write_backend is not None:
+            blob = self.write_backend.get(key)
+        from_write_path = blob is not None
+        if blob is None:
+            blob = self.read_backend.get(key)
+        stats = self.write_stats if from_write_path else self.read_stats
+        if blob is None:
+            out = self._zeros(r)  # lazy: absent cuboid reads as zeros
+        else:
+            out = decompress(blob, self._cuboid_shape(r), self._np_dtype)
+            stats.read_bytes += len(blob)
+        stats.reads += 1
+        stats.time_s += time.perf_counter() - t0
+        return out
+
+    def write_cuboid(self, r: int, m: int, data: np.ndarray,
+                     channel: int = 0) -> None:
+        if tuple(data.shape) != self._cuboid_shape(r):
+            raise ValueError(
+                f"cuboid shape {data.shape} != {self._cuboid_shape(r)}")
+        key = (r, channel, m)
+        t0 = time.perf_counter()
+        if not data.any():
+            # lazy allocation: all-zero cuboids occupy no storage
+            (self.write_backend or self.read_backend).delete(key)
+            self.read_backend.delete(key)
+            self.write_stats.writes += 1
+            self.write_stats.time_s += time.perf_counter() - t0
+            return
+        blob = compress(data.astype(self._np_dtype), self.compression_level)
+        target = self.write_backend or self.read_backend
+        target.put(key, blob)
+        self.write_stats.writes += 1
+        self.write_stats.write_bytes += len(blob)
+        self.write_stats.time_s += time.perf_counter() - t0
+
+    def has_cuboid(self, r: int, m: int, channel: int = 0) -> bool:
+        key = (r, channel, m)
+        if self.write_backend is not None and key in self.write_backend:
+            return True
+        return key in self.read_backend
+
+    # -- run (batch/sequential) ops ----------------------------------------
+    def read_run(self, r: int, start: int, stop: int,
+                 channel: int = 0) -> List[np.ndarray]:
+        """Read a contiguous morton run — ONE sequential pass (paper C7)."""
+        self.read_stats.seeks += 1
+        return [self.read_cuboid(r, m, channel) for m in range(start, stop)]
+
+    def migrate(self) -> int:
+        """Flush write path into the read path (paper: SSD→DB migration)."""
+        if self.write_backend is None:
+            return 0
+        n = 0
+        for key in list(self.write_backend.keys()):
+            blob = self.write_backend.get(key)
+            if blob is not None:
+                self.read_backend.put(key, blob)
+                self.write_backend.delete(key)
+                n += 1
+        return n
+
+    def stored_keys(self) -> List[Key]:
+        keys = set(self.read_backend.keys())
+        if self.write_backend is not None:
+            keys |= set(self.write_backend.keys())
+        return sorted(keys)
+
+    def storage_bytes(self) -> int:
+        total = 0
+        for key in self.stored_keys():
+            blob = (self.write_backend.get(key)
+                    if self.write_backend and key in self.write_backend
+                    else self.read_backend.get(key))
+            total += len(blob or b"")
+        return total

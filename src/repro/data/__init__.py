@@ -1,0 +1,3 @@
+from .pipeline import DataPipeline, TokenStore, PipelineConfig
+
+__all__ = ["DataPipeline", "TokenStore", "PipelineConfig"]

@@ -1,0 +1,5 @@
+from .supervisor import (FailureInjector, StragglerMonitor,
+                         TrainingSupervisor, WorkerFailure)
+
+__all__ = ["FailureInjector", "StragglerMonitor", "TrainingSupervisor",
+           "WorkerFailure"]

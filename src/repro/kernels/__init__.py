@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package has: ``kernel.py`` (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp
+oracle). Kernels run in interpret mode on CPU (tests) and compiled on TPU.
+
+  flash_attention -- fused GQA attention (train/prefill hot spot)
+  morton_matmul   -- matmul whose grid walks (i,j) tiles in Morton order:
+                     the paper's space-filling-curve locality (C1) applied
+                     to MXU supertiles / VMEM block reuse
+  cutout_gather   -- cuboid->dense cutout assembly (C2/C8) as aligned VMEM
+                     block copies driven by a scalar-prefetched Morton plan
+"""

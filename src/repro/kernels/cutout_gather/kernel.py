@@ -1,0 +1,61 @@
+"""Cuboid->cutout assembly as a Pallas gather kernel (paper C2/C8).
+
+The paper's §5 finding is that cutout *assembly* — not disk I/O — bounds
+throughput, and that unaligned assembly (cache-hostile byte shuffles) is 2x
+slower than aligned. The TPU translation: assembly = a sequence of
+HBM->VMEM block copies whose source row comes from the Morton plan. The
+plan (cell index per box-grid position) is a *scalar-prefetched* operand
+(pltpu.PrefetchScalarGridSpec), i.e. it is available to the BlockSpec
+index_map before the DMA is issued — exactly a database fetching the block
+list from its spatial index (C7) and then streaming blocks.
+
+Alignment shows up structurally: cuboid-aligned cutouts copy whole (8,128)-
+tiled blocks; unaligned ones round up and trim (the wrapper does this),
+paying the read-amplification the paper measures in Fig 10.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(plan_ref, packed_ref, out_ref):
+    del plan_ref  # consumed by the index maps
+    out_ref[...] = packed_ref[...]
+
+
+def cutout_gather_kernel(packed, plan, gshape: Tuple[int, ...],
+                         interpret: bool = False):
+    """packed: (n_cells, cx, cy, cz); plan: (n_box,) int32 cell per box-grid
+    position (row-major). Returns (gx*cx, gy*cy, gz*cz)."""
+    n_cells, cx, cy, cz = packed.shape
+    gx, gy, gz = gshape
+    n_box = gx * gy * gz
+    assert plan.shape == (n_box,)
+
+    def in_map(g, plan_ref):
+        return plan_ref[g], 0, 0, 0
+
+    def out_map(g, plan_ref):
+        # row-major decode of the box-grid position
+        return g // (gy * gz), (g // gz) % gy, g % gz
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_box,),
+        in_specs=[pl.BlockSpec((1, cx, cy, cz), in_map)],
+        out_specs=pl.BlockSpec((cx, cy, cz), out_map),
+    )
+    out_shape = jax.ShapeDtypeStruct((gx * cx, gy * cy, gz * cz),
+                                     packed.dtype)
+
+    def _kern(plan_ref, packed_ref, out_ref):
+        out_ref[...] = packed_ref[0]
+
+    return pl.pallas_call(_kern, grid_spec=grid_spec, out_shape=out_shape,
+                          interpret=interpret)(plan, packed)

@@ -1,0 +1,10 @@
+"""Oracle: numpy cuboid->cutout assembly via the host engine."""
+import numpy as np
+
+from ...core.cuboid import CuboidGrid
+from ...core.distributed import unpack_from_cuboids
+
+
+def cutout_ref(packed: np.ndarray, grid: CuboidGrid, lo, hi) -> np.ndarray:
+    vol = unpack_from_cuboids(np.asarray(packed), grid)
+    return vol[tuple(slice(l, h) for l, h in zip(lo, hi))]

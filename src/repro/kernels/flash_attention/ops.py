@@ -1,0 +1,37 @@
+"""Public jit'd wrapper: (B,S,H,D) layout in, kernel layout inside."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "scale", "window", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: Optional[float] = None,
+                    window: Optional[int] = None,
+                    block_q: int = 256, block_kv: int = 512,
+                    interpret: Optional[bool] = None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D) with H = K*G."""
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    interpret = _interpret_default() if interpret is None else interpret
+    # (B,Sq,H,D) -> (B,K,G,Sq,D); k: (B,Skv,K,D) -> (B,K,Skv,D)
+    qk = q.reshape(B, Sq, K, G, D).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(qk, kk, vk, causal=causal, scale=scale,
+                                 window=window, block_q=block_q,
+                                 block_kv=block_kv, interpret=interpret)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for GQA flash attention (fp32 math, O(S^2) memory)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+NEG = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool, scale: float,
+                  window: Optional[int] = None,
+                  q_offset: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D), H = K*G. fp32 throughout.
+
+    ``q_offset``: position of q[0] relative to k[0] (defaults to Skv - Sq,
+    i.e. queries at the end — matches decode/prefill conventions).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    off = Skv - Sq if q_offset is None else q_offset
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, D) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)
+    q_pos = off + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(B, Sq, H, D)

@@ -1,0 +1,38 @@
+"""Public jit'd wrapper matching models.layers.decode_attention semantics."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_kv",
+                                             "interpret"))
+def flash_decode(q, k_cache, v_cache, cache_len, *, scale: float,
+                 block_kv: int = 512,
+                 interpret: Optional[bool] = None):
+    """q: (B, 1, H, D); caches: (B, S, K, D); cache_len: scalar or (B,).
+
+    Single-token GQA attention against a cache; positions >= cache_len are
+    masked. Returns (B, 1, H, D) in q.dtype.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    B, _, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1),
+                            (B,))
+    qk = q.reshape(B, K, G, D)
+    kk = k_cache.transpose(0, 2, 1, 3)           # (B, K, S, D)
+    vk = v_cache.transpose(0, 2, 1, 3)
+    out = flash_decode_kernel(qk, kk, vk, lens, scale=scale,
+                              block_kv=block_kv, interpret=interpret)
+    return out.reshape(B, 1, H, D)

@@ -1,0 +1,4 @@
+"""Oracle: the model's own jnp decode_attention (fp32 softmax, O(S) HBM)."""
+from __future__ import annotations
+
+from ...models.layers import decode_attention as decode_ref  # noqa: F401

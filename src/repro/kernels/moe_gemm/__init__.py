@@ -1,0 +1,2 @@
+from .ops import moe_gemm
+from .ref import moe_gemm_ref

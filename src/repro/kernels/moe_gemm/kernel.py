@@ -1,0 +1,88 @@
+"""Pallas TPU grouped expert GEMM (Megablocks-lite) for small-expert MoE.
+
+§Perf Cell C showed small-expert MoE (granite: E=32, d_ff=512) is bound by
+dispatch staging, and that capacity buffers are mostly padding (top-8 at
+capacity 1.25 ⇒ up to 20% padded rows; per-expert imbalance makes real
+occupancy lower). This kernel runs the three SwiGLU expert GEMMs over the
+(E, C, d) capacity buffer with a grid over (expert, row-tile) and — the
+Megablocks idea — **skips row-tiles beyond the expert's actual token
+count** (scalar-prefetched), so padded capacity costs neither MXU cycles
+nor VMEM traffic. Weights for expert e stream into VMEM once per row-tile
+sweep; hidden activations never leave VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(counts_ref, x_ref, wg_ref, wu_ref, wd_ref, y_ref, *,
+            block_c: int):
+    e = pl.program_id(0)
+    ci = pl.program_id(1)
+    live = ci * block_c < counts_ref[e]
+
+    @pl.when(live)
+    def _compute():
+        x = x_ref[0]                                    # (Bc, d)
+        prec = jax.lax.Precision.HIGHEST
+        g = jax.lax.dot_general(x, wg_ref[0],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=F32,
+                                precision=prec)
+        u = jax.lax.dot_general(x, wu_ref[0],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=F32,
+                                precision=prec)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)        # (Bc, f) in VMEM
+        y = jax.lax.dot_general(h, wd_ref[0],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=F32,
+                                precision=prec)
+        y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+
+def moe_gemm_kernel(x, w_gate, w_up, w_down, counts, *,
+                    block_c: int = 128, interpret: bool = False):
+    """x: (E, C, d); w_*: (E, d, f)/(E, f, d); counts: (E,) int32.
+
+    Returns y: (E, C, d) — SwiGLU expert outputs; rows >= counts[e] are 0.
+    """
+    E, C, d = x.shape
+    f = w_gate.shape[-1]
+    block_c = min(block_c, C)
+    nc = -(-C // block_c)
+    pad = nc * block_c - C
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+
+    kern = functools.partial(_kernel, block_c=block_c)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E, nc),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e, c, counts: (e, c, 0)),
+            pl.BlockSpec((1, d, f), lambda e, c, counts: (e, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda e, c, counts: (e, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda e, c, counts: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d),
+                               lambda e, c, counts: (e, c, 0)),
+    )
+    y = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, nc * block_c, d), x.dtype),
+        interpret=interpret,
+    )(counts, x, w_gate, w_up, w_down)
+    return y[:, :C]

@@ -1,0 +1,29 @@
+"""Public jit'd wrapper for the grouped expert GEMM."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import moe_gemm_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def moe_gemm(x, w_gate, w_up, w_down, counts, *, block_c: int = 128,
+             interpret: Optional[bool] = None):
+    """Grouped SwiGLU expert GEMM over a capacity buffer.
+
+    x: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d);
+    counts: (E,) int32 actual tokens per expert. Row-tiles past counts[e]
+    are skipped on the MXU (Megablocks-style padding elision).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    counts = jnp.asarray(counts, jnp.int32)
+    return moe_gemm_kernel(x, w_gate, w_up, w_down, counts,
+                           block_c=block_c, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: dense SwiGLU expert GEMMs with count masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def moe_gemm_ref(x, w_gate, w_up, w_down, counts):
+    """x: (E, C, d); counts: (E,). Rows >= counts[e] output zero."""
+    g = jnp.einsum("ecd,edf->ecf", x.astype(F32), w_gate.astype(F32),
+                   precision="highest")
+    u = jnp.einsum("ecd,edf->ecf", x.astype(F32), w_up.astype(F32),
+                   precision="highest")
+    # h rounds to the working dtype, mirroring models/moe.py (and the
+    # kernel's VMEM layout)
+    h = (jax.nn.silu(g) * u).astype(x.dtype).astype(F32)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(F32),
+                   precision="highest")
+    C = x.shape[1]
+    mask = jnp.arange(C)[None, :] < counts[:, None]      # (E, C)
+    return jnp.where(mask[..., None], y, 0.0).astype(x.dtype)

@@ -1,0 +1,110 @@
+"""Tiled matmul whose (i, j) output-tile traversal follows the Morton curve.
+
+Paper C1 moved one level down the memory hierarchy: the OCP cluster orders
+cuboids along a z-order curve so spatially-adjacent data is adjacent on
+disk; here the *grid schedule* orders output tiles along the same curve so
+temporally-adjacent kernel steps touch overlapping A-row / B-column panels,
+which stay resident in VMEM between steps. Row-major traversal reuses only
+the A panel; z-order alternates reuse of both (2x fewer HBM panel fetches
+asymptotically for square grids).
+
+Grid: (n_tiles, nk) — nk innermost accumulates the K dimension into a VMEM
+scratch. ``index_map`` decodes the Morton step -> (i, j) with pure bit ops
+(jnp on traced ints, see `repro.core.morton.morton_decode_traced`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core import morton
+
+
+def _decode(t, bits: Tuple[int, int]):
+    x, y = morton.morton_decode_traced(t, bits)
+    return x, y
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_sc, *, nk: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    acc_sc[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = acc_sc[...].astype(o_ref.dtype)
+
+
+def morton_matmul_kernel(a, b, *, block_m: int = 256, block_n: int = 256,
+                         block_k: int = 256, order: str = "morton",
+                         interpret: bool = False):
+    """a: (M, K), b: (K, N) -> (M, N). ``order``: morton | rowmajor."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    if M % block_m or N % block_n or K % block_k:
+        raise ValueError("dims must divide block sizes (pad first)")
+    nm, nn, nk = M // block_m, N // block_n, K // block_k
+    bits = morton.grid_bits((nm, nn))
+    n_tiles = 1 << morton.total_bits(bits)  # pow2-padded tile count
+
+    if order == "morton":
+        def ij(t):
+            i, j = _decode(t, bits)
+            # clamp padded curve cells onto valid tiles (recomputed cheaply;
+            # the extra cells recompute a valid tile, results identical)
+            return jnp.minimum(i, nm - 1), jnp.minimum(j, nn - 1)
+    elif order == "hilbert":
+        # Hilbert wants a square pow2 grid: use the bounding order and
+        # clamp (paper §3 picks Morton for exactly this irregularity cost)
+        h_order = max(bits) if bits else 0
+        n_tiles = 1 << (2 * h_order)
+
+        def ij(t):
+            i, j = morton.hilbert_decode_2d_traced(t, h_order)
+            return jnp.minimum(i, nm - 1), jnp.minimum(j, nn - 1)
+    elif order == "rowmajor":
+        n_tiles = nm * nn
+
+        def ij(t):
+            return t // nn, t % nn
+    else:
+        raise ValueError(order)
+
+    def a_map(t, kk):
+        i, _ = ij(t)
+        return i, kk
+
+    def b_map(t, kk):
+        _, j = ij(t)
+        return kk, j
+
+    def o_map(t, kk):
+        i, j = ij(t)
+        return i, j
+
+    kern = functools.partial(_kernel, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles, nk),
+        in_specs=[pl.BlockSpec((block_m, block_k), a_map),
+                  pl.BlockSpec((block_k, block_n), b_map)],
+        out_specs=pl.BlockSpec((block_m, block_n), o_map),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

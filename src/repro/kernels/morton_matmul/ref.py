@@ -1,0 +1,6 @@
+"""Oracle: plain fp32 matmul."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))

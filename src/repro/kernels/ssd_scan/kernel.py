@@ -1,0 +1,103 @@
+"""Pallas TPU Mamba-2 SSD (state-space duality) chunked scan.
+
+Grid: (B, H, nc) — chunk index innermost and *sequential*, so the running
+inter-chunk state (N, P) lives in VMEM scratch across chunk steps, exactly
+like the online-softmax state of flash attention. Each grid step does the
+intra-chunk quadratic form on the MXU ((Q,N)x(N,Q), (Q,Q)x(Q,P)) and one
+rank-N state update — the duality's "attention-like matmuls + tiny
+recurrence" made explicit at the VMEM level.
+
+This is the Morton-locality doctrine (paper C1/C8) one level down: the
+sequential chunk walk touches each HBM block exactly once, and all
+reuse (the carried state) stays resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, s_sc, *,
+            n_chunks: int):
+    ci = pl.program_id(2)
+    Q = x_ref.shape[-2]
+
+    @pl.when(ci == 0)
+    def _init():
+        s_sc[...] = jnp.zeros_like(s_sc)
+
+    xb = x_ref[0, 0, 0].astype(F32)                    # (Q, P)
+    dtv = dt_ref[0, 0, 0].astype(F32).reshape(Q, 1)    # (Q, 1)
+    av = a_ref[0, 0, 0].astype(F32).reshape(Q, 1)      # (Q, 1) log-decay
+    Bn = b_ref[0, 0].astype(F32)                       # (Q, N)
+    Cn = c_ref[0, 0].astype(F32)                       # (Q, N)
+
+    cum = jnp.cumsum(av, axis=0)                       # (Q, 1)
+    # --- intra-chunk quadratic (attention) form ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(cum - cum.reshape(1, Q)), 0.0)
+    scores = jax.lax.dot_general(Cn, Bn, (((1,), (1,)), ((), ())))  # (Q,Q)
+    xdt = xb * dtv                                     # (Q, P)
+    y_intra = jax.lax.dot_general(scores * L, xdt,
+                                  (((1,), (0,)), ((), ())))         # (Q,P)
+
+    # --- inter-chunk: apply carried state, then update it ---
+    s_prev = s_sc[...]                                 # (N, P)
+    y_inter = jax.lax.dot_general(Cn * jnp.exp(cum), s_prev,
+                                  (((1,), (0,)), ((), ())))         # (Q,P)
+    a_total = cum[Q - 1, 0]                            # chunk log-decay
+    seg = jnp.exp(a_total - cum)                       # (Q, 1)
+    s_new = (s_prev * jnp.exp(a_total)
+             + jax.lax.dot_general(Bn, xdt * seg,
+                                   (((0,), (0,)), ((), ()))))       # (N,P)
+    s_sc[...] = s_new
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+    s_ref[0, 0] = s_new  # final chunk's write persists
+
+
+def ssd_scan_kernel(x, dt, a, b, c, *, interpret: bool = False):
+    """Kernel-layout SSD scan.
+
+    x:  (B, H, nc, Q, P)   head inputs, chunked
+    dt: (B, H, nc, Q)      softplus'd step sizes (fp32)
+    a:  (B, H, nc, Q)      log-decay dt*A (fp32, negative)
+    b:  (B, nc, Q, N)      input projections (shared across heads)
+    c:  (B, nc, Q, N)      output projections (shared across heads)
+    Returns y: (B, H, nc, Q, P) in x.dtype and final state (B, H, N, P) fp32.
+    """
+    B, H, nc, Q, P = x.shape
+    N = b.shape[-1]
+    grid = (B, H, nc)
+    kern = functools.partial(_kernel, n_chunks=nc)
+    y, s = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b_, h, c_: (b_, h, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b_, h, c_: (b_, h, c_, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b_, h, c_: (b_, h, c_, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b_, h, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b_, h, c_: (b_, c_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P),
+                         lambda b_, h, c_: (b_, h, c_, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b_, h, c_: (b_, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), F32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, s

@@ -1,0 +1,50 @@
+"""Public jit'd wrapper: model layout (B,S,H,P) in, kernel layout inside."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_kernel
+
+F32 = jnp.float32
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
+             interpret: Optional[bool] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (Mamba-2).  Matches models.ssm._ssd_chunked.
+
+    x: (B,S,H,P); dt: (B,S,H) fp32; A: (H,) fp32 (<0); B, C: (B,S,N).
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N) fp32).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    dtf = dt.astype(F32)
+    a = dtf * A.astype(F32)[None, None, :]                  # (B,Sp,H)
+    # model layout -> kernel layout
+    xk = x.reshape(Bsz, nc, Q, H, P).transpose(0, 3, 1, 2, 4)
+    dtk = dtf.reshape(Bsz, nc, Q, H).transpose(0, 3, 1, 2)
+    ak = a.reshape(Bsz, nc, Q, H).transpose(0, 3, 1, 2)
+    Bk = B.reshape(Bsz, nc, Q, N)
+    Ck = C.reshape(Bsz, nc, Q, N)
+    y, s = ssd_scan_kernel(xk, dtk, ak, Bk, Ck, interpret=interpret)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(F32), s.transpose(0, 1, 3, 2)           # (B,H,P,N)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD scan: the *fully quadratic* dual form.
+
+Deliberately NOT the chunked algorithm (that lives in models/ssm.py and in
+the kernel): materializes the full (S, S) decay-weighted attention matrix,
+so it is an independent check on both.  fp32, O(S^2) memory — test scale.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,)<0; B,C: (B,S,N).
+
+    Returns y: (B,S,H,P) fp32 and final state (B,H,P,N) fp32, where
+        y_i   = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+        state = sum_j exp(cum_last - cum_j) dt_j B_j^T x_j
+    """
+    xf = x.astype(F32)
+    dtf = dt.astype(F32)
+    Bf = B.astype(F32)
+    Cf = C.astype(F32)
+    a = dtf * A.astype(F32)                       # (B,S,H)
+    cum = jnp.cumsum(a, axis=1)                   # (B,S,H)
+    S = x.shape[1]
+    diff = cum[:, :, None, :] - cum[:, None, :, :]          # (B,S,S,H)
+    causal = (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])
+    L = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bin,bjn->bij", Cf, Bf)             # (B,S,S)
+    y = jnp.einsum("bij,bijh,bjh,bjhp->bihp",
+                   scores, L, dtf, xf)                      # (B,S,H,P)
+    seg = jnp.exp(cum[:, -1:, :] - cum)                     # (B,S,H)
+    state = jnp.einsum("bjh,bjhp,bjn->bhpn", seg * dtf, xf, Bf)
+    return y, state

@@ -1,0 +1,23 @@
+"""Production meshes (spec'd in the assignment).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; launch/dryrun.py sets XLA_FLAGS *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh for tests/examples on the real CPU device."""
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

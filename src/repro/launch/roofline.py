@@ -1,0 +1,196 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute   = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory    = HLO_bytes / (chips * HBM_bw)
+  collective= collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+NOT there, so we parse the post-SPMD HLO text and sum the result-shape
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Hardware: TPU v5e-class constants (assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+# hardware constants (per chip), from the assignment
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s/link ICI
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %x = bf16[8,128,512]{2,1,0} all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")[\s.(]")
+_TUPLE_RE = re.compile(
+    r"=\s*\(\s*(.*?)\)\s+(" + "|".join(_COLLECTIVES) + r")[\s.(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective opcode over the HLO module.
+
+    Async collectives appear as ``-start``/``-done`` pairs: count only the
+    start (the done would double-count). Result shapes are per-device
+    (post-SPMD), so these are bytes moved through each device's links.
+    """
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        opcode = None
+        for c in _COLLECTIVES:
+            if (f" {c}(" in line or f" {c}-start(" in line):
+                opcode = c
+                break
+        if opcode is None or f" {opcode}-done(" in line:
+            continue
+        marker = (f" {opcode}-start(" if f" {opcode}-start(" in line
+                  else f" {opcode}(")
+        lhs = line.split(marker)[0]
+        if "=" not in lhs:
+            continue
+        shapes_part = lhs.split("=", 1)[1]
+        total = 0
+        for dtype, dims in _SHAPE_RE.findall(shapes_part):
+            if dtype in _DTYPE_BYTES:
+                total += _shape_bytes(dtype, dims)
+        out[opcode] += total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All raw quantities are PER-DEVICE (the post-SPMD module is the
+    per-device program; verified empirically: a 2MKN matmul on 256 devices
+    reports flops/256 from compiled.cost_analysis()). The assignment's
+    ``HLO_FLOPs / (chips x peak)`` with whole-job FLOPs is identical to
+    ``per_device_FLOPs / peak``."""
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: Dict[str, int]   # per-opcode collective bytes (per device)
+    n_chips: int
+    model_flops: float = 0.0     # 6*N*D analytical (whole job)
+    per_device_peak_memory: float = 0.0
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.total_coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful work time / achievable step time (max of terms)."""
+        denom = max(self.t_compute, self.t_memory, self.t_collective)
+        ideal = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        return ideal / denom if denom else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.hbm_bytes,
+            "collective_bytes": self.total_coll_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_mem_per_device": self.per_device_peak_memory,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode: per new
+    token D = global_batch."""
+    from ..models import build_model, count_params
+    from ..models.params import is_spec
+    import jax
+
+    model = build_model(cfg)
+    specs = model.specs()
+    n_total = count_params(specs)
+    if cfg.family == "moe":
+        # active = total - (inactive expert fraction)
+        leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+        expert_params = sum(
+            int(np.prod(s.shape)) for s in leaves
+            if "experts" in (s.axes or ()))
+        n_active = (n_total - expert_params
+                    + expert_params * cfg.top_k / cfg.n_experts)
+    else:
+        n_active = n_total
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(compiled, cfg, shape, n_chips: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = 0.0
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    n_chips=n_chips,
+                    model_flops=model_flops_estimate(cfg, shape),
+                    per_device_peak_memory=peak)

@@ -1,0 +1,115 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation. ``input_specs`` returns the
+abstract argument tuple matching the lowered step for (arch x shape):
+train -> train_step(params, opt, batch); prefill -> prefill(params, ...);
+decode -> serve_step(params, cache, token, index).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import build_model
+from ..models.config import ModelConfig, ShapeConfig, SHAPES
+from ..models.params import ParamSpec, tree_map_specs
+from ..optim import adamw_init_specs
+from ..train.sharding import ShardingPlan, batch_pspec, resolve_leaf
+
+INT = jnp.int32
+
+
+def _sds(shape, dtype, plan: ShardingPlan, pspec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(plan.mesh, pspec))
+
+
+def abstract_sharded_params(specs, plan: ShardingPlan):
+    def one(s: ParamSpec):
+        return _sds(s.shape, jnp.dtype(s.dtype), plan,
+                    resolve_leaf(s, plan))
+    return tree_map_specs(one, specs)
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Tuple[bool, str]:
+    """DESIGN.md §5: long_500k only for sub-quadratic families."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch at 524k context "
+                       "(KV cache O(S) per token, attention O(S^2))")
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan
+                ) -> Dict:
+    """Training-batch abstract inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    bp = batch_pspec(plan, 2, B)
+    out = {}
+    if cfg.family == "encdec":
+        # enc frames = S (stub audio), teacher-forced text = S // 4
+        Sd = max(S // 4, 16)
+        out["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16, plan,
+                             batch_pspec(plan, 3, B))
+        out["tokens"] = _sds((B, Sd), INT, plan, bp)
+        out["labels"] = _sds((B, Sd), INT, plan, bp)
+    elif cfg.frontend == "patch_stub":
+        St = S - cfg.n_frontend_tokens
+        out["embeds"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                             jnp.bfloat16, plan, batch_pspec(plan, 3, B))
+        out["tokens"] = _sds((B, St), INT, plan, bp)
+        out["labels"] = _sds((B, St), INT, plan, bp)
+    else:
+        out["tokens"] = _sds((B, S), INT, plan, bp)
+        out["labels"] = _sds((B, S), INT, plan, bp)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan):
+    """(cache, token, index) abstract inputs for serve_step."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cache_specs = model.cache_specs(B, S, enc_len=min(S, 4096))
+    else:
+        cache_specs = model.cache_specs(B, S)
+    cache = abstract_sharded_params(cache_specs, plan)
+    token = _sds((B, 1), INT, plan, batch_pspec(plan, 2, B))
+    index = jax.ShapeDtypeStruct((), INT)
+    return cache, token, index
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan):
+    B, S = shape.global_batch, shape.seq_len
+    bp = batch_pspec(plan, 2, B)
+    if cfg.family == "encdec":
+        return (_sds((B, S, cfg.d_model), jnp.bfloat16, plan,
+                     batch_pspec(plan, 3, B)),)
+    if cfg.frontend == "patch_stub":
+        return (_sds((B, S - cfg.n_frontend_tokens), INT, plan, bp),
+                _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16,
+                     plan, batch_pspec(plan, 3, B)))
+    return (_sds((B, S), INT, plan, bp),)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan,
+                with_optimizer: bool = True, opt_cfg=None):
+    """Full abstract argument tuple for the lowered step of this cell."""
+    model = build_model(cfg)
+    params = abstract_sharded_params(model.specs(), plan)
+    if shape.kind == "train":
+        args = [params]
+        if with_optimizer:
+            state_dtype = (opt_cfg.state_dtype if opt_cfg is not None
+                           else "float32")
+            args.append(abstract_sharded_params(
+                adamw_init_specs(model.specs(), state_dtype), plan))
+        args.append(batch_specs(cfg, shape, plan))
+        return tuple(args)
+    if shape.kind == "prefill":
+        return (params,) + prefill_specs(cfg, shape, plan)
+    cache, token, index = decode_specs(cfg, shape, plan)
+    return (params, cache, token, index)

@@ -1,0 +1,17 @@
+"""Model zoo: registry mapping config family -> model class."""
+from .config import ModelConfig, ShapeConfig, SHAPES
+from .encdec import EncDecLM
+from .lm import LM
+from .params import (ParamSpec, abstract_params, count_params, init_params,
+                     partition_specs)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "LM", "EncDecLM",
+           "build_model", "ParamSpec", "abstract_params", "count_params",
+           "init_params", "partition_specs"]

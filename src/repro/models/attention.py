@@ -1,0 +1,105 @@
+"""GQA/MQA attention block with RoPE, blockwise train path and cached decode."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (blockwise_attention, cache_insert, decode_attention,
+                     per_seq_positions, rms_norm, rms_norm_spec, rotary)
+from .params import ParamSpec
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "w_q": ParamSpec((d, H * hd), ("embed", "heads"), dtype=cfg.dtype),
+        "w_k": ParamSpec((d, K * hd), ("embed", "kv_heads"),
+                         dtype=cfg.dtype),
+        "w_v": ParamSpec((d, K * hd), ("embed", "kv_heads"),
+                         dtype=cfg.dtype),
+        "w_o": ParamSpec((H * hd, d), ("heads", "embed"), dtype=cfg.dtype),
+    }
+
+
+def qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["w_q"]).reshape(B, S, H, hd)
+    k = (x @ p["w_k"]).reshape(B, S, K, hd)
+    v = (x @ p["w_v"]).reshape(B, S, K, hd)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p, cfg: ModelConfig, x, positions,
+              window: Optional[int] = None,
+              causal: bool = True,
+              skip_masked_blocks: bool = True,
+              return_kv: bool = False):
+    """Full-sequence (train/prefill) attention. x: (B, S, d).
+
+    ``return_kv=True`` additionally returns the (k, v) projections so a
+    prefill caller can build the decode cache WITHOUT a second pass of
+    K/V projections (the fused-prefill §Perf optimization)."""
+    B, S, _ = x.shape
+    q, k, v = qkv(p, cfg, x, positions)
+    scale = cfg.head_dim ** -0.5
+    if cfg.use_flash_kernel:
+        from ..kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=causal,
+                                        scale=scale, window=window)
+    else:
+        out = blockwise_attention(q, k, v, causal=causal, scale=scale,
+                                  block_q=cfg.attn_block_q,
+                                  block_kv=cfg.attn_block_kv,
+                                  window=window,
+                                  skip_masked_blocks=skip_masked_blocks,
+                                  unroll=cfg.attn_unroll)
+    out = out.reshape(B, S, -1) @ p["w_o"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, index,
+                     window: Optional[int] = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, d); caches: (B, S, K, hd); index:
+    scalar position or (B,) per-sequence positions (continuous batching).
+    Returns (out, new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = per_seq_positions(index, B)
+    q = (x @ p["w_q"]).reshape(B, 1, H, hd)
+    k = (x @ p["w_k"]).reshape(B, 1, K, hd)
+    v = (x @ p["w_v"]).reshape(B, 1, K, hd)
+    q = rotary(q, positions, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rope_theta)
+    cache_k = cache_insert(cache_k, k, index)
+    cache_v = cache_insert(cache_v, v, index)
+    if cfg.use_flash_decode and window is None:
+        from ..kernels.flash_decode import ops as fd_ops
+        out = fd_ops.flash_decode(q, cache_k, cache_v,
+                                  jnp.asarray(index, jnp.int32) + 1,
+                                  scale=hd ** -0.5)
+    else:
+        out = decode_attention(q, cache_k, cache_v, index + 1,
+                               scale=hd ** -0.5, window=window)
+    return out.reshape(B, 1, -1) @ p["w_o"], cache_k, cache_v
+
+
+def prefill_kv(p, cfg: ModelConfig, x, positions, cache_len: int):
+    """Compute K/V for the prompt and place into a fresh cache."""
+    B, S, _ = x.shape
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    k = rotary((x @ p["w_k"]).reshape(B, S, K, hd), positions,
+               cfg.rope_theta)
+    v = (x @ p["w_v"]).reshape(B, S, K, hd)
+    pad = cache_len - S
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k, v

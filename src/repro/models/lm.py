@@ -1,0 +1,432 @@
+"""Decoder-only LM assembly for all architecture families.
+
+Families: dense (GQA/MQA), moe (top-k, optional dense residual — Arctic),
+hybrid (Griffin RG-LRU + local attention), ssm (Mamba-2), and dense+VLM
+(patch-embedding frontend stub). Layers are stacked and scanned
+(`jax.lax.scan`) to keep HLO size O(1) in depth; per-block remat is a config
+knob. The encoder-decoder family lives in `encdec.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention, attention_decode, attention_specs, qkv)
+from .config import ModelConfig
+from .layers import decode_attention, mlp, mlp_specs, rms_norm, rms_norm_spec, rotary
+from .moe import moe, moe_specs
+from .params import ParamSpec, tree_map_specs
+from .rglru import rglru_block, rglru_decode_step, rglru_specs
+from .ssm import ssm_block, ssm_decode_step, ssm_specs
+
+F32 = jnp.float32
+
+
+def stack_specs(tree, n: int):
+    return tree_map_specs(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape,
+                                      axes=("layers",) + s.axes), tree)
+
+
+class LM:
+    """Decoder-only language model over a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        if cfg.family not in ("dense", "moe", "hybrid", "ssm"):
+            raise ValueError(f"LM does not handle family {cfg.family}")
+        self.cfg = cfg
+
+    # ---------------------------------------------------------- specs ----
+    def _block_specs(self) -> dict:
+        cfg = self.cfg
+        if cfg.family == "dense":
+            return {"ln1": rms_norm_spec(cfg.d_model),
+                    "attn": attention_specs(cfg),
+                    "ln2": rms_norm_spec(cfg.d_model),
+                    "mlp": mlp_specs(cfg)}
+        if cfg.family == "moe":
+            out = {"ln1": rms_norm_spec(cfg.d_model),
+                   "attn": attention_specs(cfg),
+                   "ln2": rms_norm_spec(cfg.d_model),
+                   "moe": moe_specs(cfg)}
+            if cfg.moe_dense_residual:
+                out["mlp"] = mlp_specs(cfg)
+            return out
+        if cfg.family == "ssm":
+            return {"ln": rms_norm_spec(cfg.d_model),
+                    "ssm": ssm_specs(cfg)}
+        raise AssertionError
+
+    def _hybrid_unit_specs(self, kind: str) -> dict:
+        cfg = self.cfg
+        temporal = (rglru_specs(cfg) if kind == "R"
+                    else attention_specs(cfg))
+        return {"ln1": rms_norm_spec(cfg.d_model), "temporal": temporal,
+                "ln2": rms_norm_spec(cfg.d_model), "mlp": mlp_specs(cfg)}
+
+    def _hybrid_layout(self) -> Tuple[int, int]:
+        """(#full pattern repeats, #leftover layers)."""
+        cfg = self.cfg
+        plen = len(cfg.hybrid_pattern)
+        return cfg.n_layers // plen, cfg.n_layers % plen
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+        out: Dict = {
+            "embed": ParamSpec((cfg.vocab, cfg.d_model),
+                               ("vocab", "embed"), dtype=cfg.dtype),
+            "final_norm": rms_norm_spec(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                       ("embed", "vocab"), dtype=cfg.dtype)
+        if cfg.family == "hybrid":
+            n_rep, n_left = self._hybrid_layout()
+            rep = {k: self._hybrid_unit_specs(k2)
+                   for k, k2 in zip("abcdefgh", cfg.hybrid_pattern)}
+            out["blocks"] = stack_specs(rep, n_rep)
+            if n_left:
+                left = {k: self._hybrid_unit_specs(k2)
+                        for k, k2 in zip(
+                            "abcdefgh", cfg.hybrid_pattern[:n_left])}
+                out["tail"] = stack_specs(left, 1)
+        else:
+            out["blocks"] = stack_specs(self._block_specs(), cfg.n_layers)
+        return out
+
+    # -------------------------------------------------------- forward ----
+    def _apply_unit(self, p, x, positions, kind: str,
+                    skip_masked_blocks=True):
+        """One hybrid unit: temporal mixer + MLP, both pre-norm residual."""
+        cfg = self.cfg
+        if kind == "R":
+            h = rglru_block(p["temporal"], cfg, rms_norm(x, p["ln1"],
+                                                         cfg.norm_eps))
+        else:
+            h = attention(p["temporal"], cfg,
+                          rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+                          window=cfg.local_window,
+                          skip_masked_blocks=skip_masked_blocks)
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+        return x
+
+    def _block_fwd(self, p, x, positions, skip_masked_blocks=True,
+                   pattern=None):
+        cfg = self.cfg
+        aux = jnp.zeros((), F32)
+        if cfg.family == "dense":
+            h = attention(p["attn"], cfg, rms_norm(x, p["ln1"],
+                                                   cfg.norm_eps),
+                          positions, skip_masked_blocks=skip_masked_blocks)
+            x = x + h
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                        cfg.act)
+        elif cfg.family == "moe":
+            h = attention(p["attn"], cfg, rms_norm(x, p["ln1"],
+                                                   cfg.norm_eps),
+                          positions, skip_masked_blocks=skip_masked_blocks)
+            x = x + h
+            xin = rms_norm(x, p["ln2"], cfg.norm_eps)
+            y, aux = moe(p["moe"], cfg, xin)
+            if cfg.moe_dense_residual:
+                y = y + mlp(p["mlp"], xin, cfg.act)
+            x = x + y
+        elif cfg.family == "ssm":
+            x = x + ssm_block(p["ssm"], cfg, rms_norm(x, p["ln"],
+                                                      cfg.norm_eps))
+        else:  # hybrid repeat unit
+            for key, kind in zip("abcdefgh", pattern or cfg.hybrid_pattern):
+                x = self._apply_unit(p[key], x, positions, kind,
+                                     skip_masked_blocks)
+        return x, aux
+
+    def embed_tokens(self, params, tokens):
+        from ..train.sharding import constrain
+        x = jnp.take(params["embed"], tokens, axis=0)
+        # pin batch sharding: the gather would otherwise inherit the
+        # FSDP-sharded table layout and drop it (see sharding.constrain)
+        return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+    def logits(self, params, x):
+        from ..train.sharding import constrain
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        out = (x @ params["embed"].T if cfg.tie_embeddings
+               else x @ params["lm_head"])
+        return constrain(out, ("act_batch", "act_seq", "act_vocab"))
+
+    def forward(self, params, tokens, *, embeds=None,
+                skip_masked_blocks=True):
+        """tokens: (B, S_text) int32. embeds: optional (B, S_img, d) stub
+        frontend output, prepended to the sequence (VLM/audio backbones).
+        Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, tokens)
+        if embeds is not None:
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        from ..train.sharding import constrain
+
+        def body(carry, layer_p):
+            x, aux = carry
+            x, a = self._block_fwd(layer_p, x, positions,
+                                   skip_masked_blocks=skip_masked_blocks)
+            x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+            return (x, aux + a), None
+
+        from .layers import maybe_remat
+        body = maybe_remat(body, cfg.remat)
+        aux0 = jnp.zeros((), F32)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+        else:
+            n = jax.tree.leaves(params["blocks"])[0].shape[0]
+            carry = (x, aux0)
+            for i in range(n):
+                layer = jax.tree.map(lambda a: a[i], params["blocks"])
+                carry, _ = body(carry, layer)
+            x, aux = carry
+        if "tail" in params:
+            _, n_left = self._hybrid_layout()
+            tail_pat = cfg.hybrid_pattern[:n_left]
+
+            def tail_body(carry, layer_p):
+                x, aux = carry
+                x, a = self._block_fwd(
+                    layer_p, x, positions, pattern=tail_pat,
+                    skip_masked_blocks=skip_masked_blocks)
+                return (x, aux + a), None
+
+            tail_body = maybe_remat(tail_body, cfg.remat)
+            (x, aux), _ = jax.lax.scan(tail_body, (x, aux), params["tail"])
+        return self.logits(params, x), aux
+
+    # ---------------------------------------------------------- decode ----
+    def _unit_cache_spec(self, kind: str, B: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        if kind == "R":
+            return {
+                "h": ParamSpec((B, cfg.d_rnn), ("batch", "rnn"),
+                               dtype="float32", init="zeros"),
+                "conv": ParamSpec((B, cfg.conv_width - 1, cfg.d_rnn),
+                                  ("batch", None, "rnn"),
+                                  dtype=cfg.dtype, init="zeros"),
+            }
+        wlen = min(cfg.local_window, cache_len)
+        return {
+            "k": ParamSpec((B, wlen, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_len", "kv_heads_cache", None),
+                           dtype=cfg.dtype, init="zeros"),
+            "v": ParamSpec((B, wlen, cfg.n_kv_heads, cfg.head_dim),
+                           ("batch", "kv_len", "kv_heads_cache", None),
+                           dtype=cfg.dtype, init="zeros"),
+        }
+
+    def cache_specs(self, B: int, cache_len: int) -> dict:
+        """Decode-cache ParamSpec tree (dry-run uses abstract version).
+
+        Full-attention families allocate (L, B, S, K, hd) KV caches; the
+        hybrid family a bounded local window + O(1) recurrent states; the
+        ssm family only O(1) states — the sub-quadratic story of DESIGN §5.
+        """
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            kv = {
+                "k": ParamSpec((B, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                               ("batch", "kv_len", "kv_heads_cache", None),
+                               dtype=cfg.dtype, init="zeros"),
+                "v": ParamSpec((B, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                               ("batch", "kv_len", "kv_heads_cache", None),
+                               dtype=cfg.dtype, init="zeros"),
+            }
+            return {"blocks": stack_specs(kv, cfg.n_layers)}
+        if cfg.family == "ssm":
+            st = {
+                "state": ParamSpec(
+                    (B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    ("batch", "heads_cache", None, None),
+                    dtype="float32", init="zeros"),
+                "conv": ParamSpec(
+                    (B, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                    ("batch", None, "inner"), dtype=cfg.dtype,
+                    init="zeros"),
+            }
+            return {"blocks": stack_specs(st, cfg.n_layers)}
+        # hybrid
+        n_rep, n_left = self._hybrid_layout()
+        rep = {k: self._unit_cache_spec(k2, B, cache_len)
+               for k, k2 in zip("abcdefgh", cfg.hybrid_pattern)}
+        out = {"blocks": stack_specs(rep, n_rep)}
+        if n_left:
+            left = {k: self._unit_cache_spec(k2, B, cache_len)
+                    for k, k2 in zip("abcdefgh",
+                                     cfg.hybrid_pattern[:n_left])}
+            out["tail"] = stack_specs(left, 1)
+        return out
+
+    def _unit_decode(self, p, c, x, index, kind: str):
+        cfg = self.cfg
+        if kind == "R":
+            h, hs, conv = rglru_decode_step(
+                p["temporal"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+                c["h"], c["conv"])
+            c = {"h": hs, "conv": conv}
+        else:
+            # rotating window cache: slot = index mod window
+            wlen = c["k"].shape[1]
+            xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+            B = x.shape[0]
+            H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            from .layers import cache_insert, per_seq_positions
+            positions = per_seq_positions(index, B)
+            q = rotary((xin @ p["temporal"]["w_q"]).reshape(B, 1, H, hd),
+                       positions, cfg.rope_theta)
+            k = rotary((xin @ p["temporal"]["w_k"]).reshape(B, 1, K, hd),
+                       positions, cfg.rope_theta)
+            v = (xin @ p["temporal"]["w_v"]).reshape(B, 1, K, hd)
+            slot = jnp.mod(jnp.asarray(index, jnp.int32), wlen)
+            ck = cache_insert(c["k"], k, slot)
+            cv = cache_insert(c["v"], v, slot)
+            # valid slots: all < min(index+1, wlen)
+            n_valid = jnp.minimum(index + 1, wlen)
+            out = decode_attention(q, ck, cv, n_valid, scale=hd ** -0.5)
+            h = out.reshape(B, 1, -1) @ p["temporal"]["w_o"]
+            c = {"k": ck, "v": cv}
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+        return x, c
+
+    def _block_decode(self, p, c, x, index, pattern=None):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            xin = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, ck, cv = attention_decode(p["attn"], cfg, xin, c["k"],
+                                         c["v"], index)
+            x = x + h
+            xin2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if cfg.family == "dense":
+                x = x + mlp(p["mlp"], xin2, cfg.act)
+            else:
+                y, _ = moe(p["moe"], cfg, xin2)
+                if cfg.moe_dense_residual:
+                    y = y + mlp(p["mlp"], xin2, cfg.act)
+                x = x + y
+            return x, {"k": ck, "v": cv}
+        if cfg.family == "ssm":
+            h, st, conv = ssm_decode_step(
+                p["ssm"], cfg, rms_norm(x, p["ln"], cfg.norm_eps),
+                c["state"], c["conv"])
+            return x + h, {"state": st, "conv": conv}
+        # hybrid repeat unit
+        new_c = {}
+        for key, kind in zip("abcdefgh", pattern or cfg.hybrid_pattern):
+            x, new_c[key] = self._unit_decode(p[key], c[key], x, index, kind)
+        return x, new_c
+
+    def decode_step(self, params, cache, token, index):
+        """token: (B, 1) int32; index: scalar int32 position, or (B,)
+        per-sequence positions (continuous batching).
+        Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, token)
+
+        def body(x, pc):
+            p, c = pc
+            x, c_new = self._block_decode(p, c, x, index)
+            return x, c_new
+
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(
+                body, x, (params["blocks"], cache["blocks"]))
+        else:
+            n = jax.tree.leaves(params["blocks"])[0].shape[0]
+            outs = []
+            for i in range(n):
+                p = jax.tree.map(lambda a: a[i], params["blocks"])
+                c = jax.tree.map(lambda a: a[i], cache["blocks"])
+                x, cn = body(x, (p, c))
+                outs.append(cn)
+            new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache = {"blocks": new_blocks}
+        if "tail" in params:
+            _, n_left = self._hybrid_layout()
+            tail_pat = cfg.hybrid_pattern[:n_left]
+
+            def tail_body(x, pc):
+                p, c = pc
+                return self._block_decode(p, c, x, index, pattern=tail_pat)
+
+            x, new_tail = jax.lax.scan(
+                tail_body, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+        return self.logits(params, x), new_cache
+
+    # --------------------------------------------------------- prefill ----
+    def prefill(self, params, tokens, cache_len: int):
+        """Run the prompt, build a decode cache. Used by examples/serve.
+
+        Implemented for dense/moe (full KV) and ssm (final state); hybrid
+        prefill processes the prompt token-by-token through decode_step
+        (simple, correct; optimized hybrid prefill is future work).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        if cfg.family in ("dense", "moe"):
+            from .attention import prefill_kv
+            x = self.embed_tokens(params, tokens)
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            pad = cache_len - S
+
+            def body(carry, layer_p):
+                """Baseline: K/V projected twice (once for the cache, once
+                inside _block_fwd's attention)."""
+                x, = carry
+                xin = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+                k, v = prefill_kv(layer_p["attn"], cfg, xin, positions,
+                                  cache_len)
+                x, _ = self._block_fwd(layer_p, x, positions)
+                return (x,), {"k": k, "v": v}
+
+            def fused_body(carry, layer_p):
+                """§Perf fused path: the forward pass's K/V feed the cache
+                directly — one projection pass instead of two."""
+                x, = carry
+                xin = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+                h, (k, v) = attention(layer_p["attn"], cfg, xin, positions,
+                                      return_kv=True)
+                x = x + h
+                xin2 = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+                if cfg.family == "dense":
+                    x = x + mlp(layer_p["mlp"], xin2, cfg.act)
+                else:
+                    y, _ = moe(layer_p["moe"], cfg, xin2)
+                    if cfg.moe_dense_residual:
+                        y = y + mlp(layer_p["mlp"], xin2, cfg.act)
+                    x = x + y
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                return (x,), {"k": k, "v": v}
+
+            from .encdec import _maybe_scan
+            (x,), kv = _maybe_scan(
+                cfg, fused_body if cfg.fused_prefill_kv else body,
+                (x,), params["blocks"])
+            return self.logits(params, x[:, -1:]), {"blocks": kv}
+        # ssm / hybrid: token-by-token through decode (reference path)
+        from .params import abstract_params, init_params
+        cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+            self.cache_specs(B, cache_len),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        logits = None
+        for i in range(S):
+            logits, cache = self.decode_step(params, cache, tokens[:, i:i+1],
+                                             jnp.int32(i))
+        return logits, cache

@@ -1,0 +1,155 @@
+"""Top-k Mixture-of-Experts with sort-based (Megablocks-style) dispatch.
+
+No (T, E, C) one-hot dispatch tensor is ever materialized: tokens are
+argsorted by expert id, placed into a capacity-bounded (E, C, d) buffer by
+scatter, run through a grouped expert GEMM, and gathered back weighted by
+router gates. Tokens over capacity are dropped (standard GShard semantics).
+
+Sharding: expert buffers carry the logical "experts" axis -> mesh `model`
+(expert parallelism); the scatter/gather across the token-sharded and
+expert-sharded layouts lowers to all-to-all — the EP dispatch collective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+F32 = jnp.float32
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "w_router": ParamSpec((d, E), ("embed", None), dtype="float32"),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "ff"),
+                            dtype=cfg.dtype),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "ff"),
+                          dtype=cfg.dtype),
+        "w_down": ParamSpec((E, f, d), ("experts", "ff", "embed"),
+                            dtype=cfg.dtype),
+    }
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(cfg.top_k, min(c, n_tokens))
+
+
+def moe(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    ``cfg.moe_dispatch``:
+      gspmd — one global dispatch; GSPMD lowers the token→expert scatter
+              across the expert-sharded buffer to all-to-all (EP), or —
+              when experts are replicated — replicates the whole (E·C, d)
+              buffer on every device (pathological; see §Perf Cell C).
+      local — vmap over a dp-sharded leading dim: every device dispatches
+              only its own tokens into a LOCAL capacity buffer and runs
+              the expert GEMMs there; no cross-device scatter exists at
+              all. Expert weights are all-gathered over DP (ordinary FSDP
+              traffic) and stay TP-sharded over `model` (the ff
+              contraction psums activation-sized partials).
+    """
+    if cfg.moe_dispatch == "local":
+        out = _moe_local(p, cfg, x)
+        if out is not None:
+            return out
+    return _moe_core(p, cfg, x)
+
+
+def _moe_local(p, cfg: ModelConfig, x):
+    """Local dispatch via vmap over a dp-sharded leading dim.
+
+    Tokens reshape to (dp_size, T/dp_size, d) with dim 0 sharded over the
+    DP axes; the whole dispatch/GEMM/return is vmapped over dim 0. Every
+    scatter/sort/gather then carries a *parallel batch dim aligned with
+    the sharding*, which GSPMD partitions without any cross-device
+    communication — each device dispatches exactly its own tokens into
+    its own (E, C_local, d) buffer. (A shard_map formulation is
+    semantically identical but XLA:CPU miscompiles grad-of-shard_map on
+    region-boundary collectives — "Invalid binary instruction opcode
+    copy" — so the vmap encoding is used.)
+
+    Returns None when no plan/divisible DP axis is available
+    (single-device tests, batch=1 cells) — caller falls back to gspmd.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..train.sharding import _ACTIVE_PLAN
+    plan = _ACTIVE_PLAN[0]
+    if plan is None:
+        return None
+    dp = tuple(a for a in plan.dp_axes if plan.mesh.shape[a] > 1)
+    if not dp:
+        return None
+    dp_size = int(np.prod([plan.mesh.shape[a] for a in dp]))
+    B, S, d = x.shape
+    if B % dp_size != 0:
+        return None
+    T = B * S
+    xt = x.reshape(dp_size, T // dp_size, d)
+    xt = jax.lax.with_sharding_constraint(
+        xt, NamedSharding(plan.mesh, P(dp, None, None)))
+    out, aux = jax.vmap(lambda xl: _moe_tokens(p, cfg, xl))(xt)
+    out = out.reshape(B, S, d)
+    return out, aux.mean()
+
+
+def _moe_core(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    out, aux = _moe_tokens(p, cfg, x.reshape(B * S, d))
+    return out.reshape(B, S, d), aux
+
+
+def _moe_tokens(p, cfg: ModelConfig, xt) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch + expert GEMMs over a flat (T, d) token block."""
+    T, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, T)
+
+    logits = (xt.astype(F32) @ p["w_router"].astype(F32))        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renorm
+
+    # --- load-balancing auxiliary loss (Switch/GShard) ---
+    me = probs.mean(axis=0)                                       # (E,)
+    ce = jnp.zeros((E,), F32).at[expert_ids.reshape(-1)].add(
+        1.0 / (T * k))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch ---
+    flat_ids = expert_ids.reshape(T * k)                          # (Tk,)
+    order = jnp.argsort(flat_ids)                                 # stable
+    sorted_ids = flat_ids[order]
+    token_of = order // k                                         # (Tk,)
+    counts = jnp.zeros((E,), jnp.int32).at[sorted_ids].add(1)
+    offsets = jnp.cumsum(counts) - counts                         # excl cumsum
+    pos_in_expert = jnp.arange(T * k) - offsets[sorted_ids]
+    keep = pos_in_expert < C                                      # drop excess
+    slot = sorted_ids * C + jnp.clip(pos_in_expert, 0, C - 1)     # (Tk,)
+
+    buf = jnp.zeros((E * C, d), xt.dtype)
+    src = jnp.take(xt, token_of, axis=0) * keep[:, None].astype(xt.dtype)
+    buf = buf.at[slot].add(src, mode="drop")                      # (EC, d)
+    grouped = buf.reshape(E, C, d)
+
+    # --- grouped expert GEMMs (SwiGLU experts) ---
+    g = jnp.einsum("ecd,edf->ecf", grouped, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", grouped, p["w_up"])
+    h = jax.nn.silu(g.astype(F32)).astype(xt.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, d)
+
+    # --- gather back, weighted by gates ---
+    picked = jnp.take(y, slot, axis=0)                            # (Tk, d)
+    w = (gate_vals.reshape(T * k)[order] * keep).astype(xt.dtype)
+    out = jnp.zeros((T, d), xt.dtype).at[token_of].add(picked * w[:, None])
+    return out, aux

@@ -1,0 +1,87 @@
+"""Abstract parameter specs: shapes + logical sharding axes.
+
+Models declare parameters as ``ParamSpec`` trees, so the SAME declaration
+serves (a) real initialization for smoke tests/examples, (b) allocation-free
+``jax.ShapeDtypeStruct`` trees for the multi-pod dry-run, and (c)
+PartitionSpec derivation via logical-axis rules (train/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: LogicalAxes                      # logical name per dim (or None)
+    dtype: str = "bfloat16"
+    init: str = "normal"                   # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes rank mismatch {self.shape} {self.axes}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], object], specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), specs)
+
+
+def init_params(specs, rng: jax.Array, dtype_override: Optional[str] = None):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = jnp.dtype(dtype_override or s.dtype)
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * s.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def partition_specs(specs, rules: Dict[str, object]):
+    """Logical axes -> jax PartitionSpec via a rules dict.
+
+    rules maps logical axis name -> mesh axis (str), tuple of mesh axes, or
+    None (replicate). Unknown logical names replicate.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(s: ParamSpec):
+        return P(*[rules.get(a) if a is not None else None for a in s.axes])
+
+    return tree_map_specs(one, specs)
+
+
+def named_shardings(specs, mesh, rules):
+    from jax.sharding import NamedSharding
+    pspecs = partition_specs(specs, rules)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspecs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))

@@ -1,0 +1,81 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Train path uses `jax.lax.associative_scan` over the sequence (the gated
+linear recurrence is associative), decode is an O(1) state update. Combined
+with a sliding local-attention block at a 1:2 ratio this gives the hybrid
+family its bounded-state long-context decode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+F32 = jnp.float32
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d, dr = cfg.d_model, cfg.d_rnn
+    return {
+        "w_x": ParamSpec((d, dr), ("embed", "rnn"), dtype=cfg.dtype),
+        "w_y": ParamSpec((d, dr), ("embed", "rnn"), dtype=cfg.dtype),
+        "conv_w": ParamSpec((cfg.conv_width, dr), (None, "rnn"),
+                            dtype=cfg.dtype),
+        "conv_b": ParamSpec((dr,), ("rnn",), init="zeros", dtype=cfg.dtype),
+        "w_a": ParamSpec((dr, dr), ("rnn", None), dtype=cfg.dtype),
+        "b_a": ParamSpec((dr,), (None,), init="zeros", dtype="float32"),
+        "w_i": ParamSpec((dr, dr), ("rnn", None), dtype=cfg.dtype),
+        "b_i": ParamSpec((dr,), (None,), init="zeros", dtype="float32"),
+        "lam": ParamSpec((dr,), ("rnn",), init="ones", dtype="float32"),
+        "w_o": ParamSpec((dr, d), ("rnn", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(F32) + p["b_a"])
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(F32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,dr) <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0))
+    b = beta * i * u.astype(F32)
+    return a, b
+
+
+def rglru_block(p, cfg: ModelConfig, x) -> jax.Array:
+    """Full-sequence recurrent mixer. x: (B,S,d)."""
+    u = _causal_conv(x @ p["w_x"], p["conv_w"], p["conv_b"])
+    y = jax.nn.gelu((x @ p["w_y"]).astype(F32), approximate=True)
+    a, b = _gates(p, u)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h * y).astype(x.dtype)
+    return out @ p["w_o"]
+
+
+def rglru_decode_step(p, cfg: ModelConfig, x, h_state, conv_state
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,1,d); h_state: (B,dr) f32; conv_state: (B,W-1,dr)."""
+    u_t = (x @ p["w_x"])[:, 0]                            # (B,dr)
+    hist = jnp.concatenate([conv_state, u_t[:, None]], axis=1)
+    u = ((hist * p["conv_w"][None]).sum(axis=1) + p["conv_b"])[:, None]
+    y = jax.nn.gelu((x @ p["w_y"]).astype(F32), approximate=True)[:, 0]
+    a, b = _gates(p, u)
+    h = a[:, 0] * h_state + b[:, 0]                       # (B,dr)
+    out = (h * y).astype(x.dtype)[:, None]                # (B,1,dr)
+    return out @ p["w_o"], h, hist[:, 1:]

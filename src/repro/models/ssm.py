@@ -1,0 +1,167 @@
+"""Mamba-2 (SSD, state-space duality) layer — arXiv:2405.21060.
+
+Training/prefill uses the *chunked* SSD algorithm: intra-chunk attention-like
+matmuls (MXU-friendly) plus an inter-chunk scan over per-chunk states —
+exactly the quadratic<->recurrent duality of the paper. Decode is the O(1)
+recurrent state update, which is what makes `long_500k` feasible for this
+family (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+from .params import ParamSpec
+
+F32 = jnp.float32
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    dconv = di + 2 * N
+    return {
+        "w_z": ParamSpec((d, di), ("embed", "inner"), dtype=cfg.dtype),
+        "w_xBC": ParamSpec((d, dconv), ("embed", "inner"), dtype=cfg.dtype),
+        "w_dt": ParamSpec((d, H), ("embed", None), dtype=cfg.dtype),
+        "conv_w": ParamSpec((cfg.conv_width, dconv), (None, "inner"),
+                            dtype=cfg.dtype),
+        "conv_b": ParamSpec((dconv,), ("inner",), init="zeros",
+                            dtype=cfg.dtype),
+        "A_log": ParamSpec((H,), (None,), init="zeros", dtype="float32"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros", dtype="float32"),
+        "D": ParamSpec((H,), (None,), init="ones", dtype="float32"),
+        "norm": ParamSpec((di,), ("inner",), init="ones", dtype="float32"),
+        "w_out": ParamSpec((di, d), ("inner", "embed"), dtype=cfg.dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD.  x:(B,S,H,P) dt:(B,S,H) A:(H,)<0  B,C:(B,S,N).
+
+    Returns y:(B,S,H,P) and the final state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    a = dt * A  # (B,S,H) log-decay per step (negative)
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    ac = a.reshape(Bsz, nc, chunk, H)
+    Bc = B.reshape(Bsz, nc, chunk, N)
+    Cc = C.reshape(Bsz, nc, chunk, N)
+
+    cum = jnp.cumsum(ac, axis=2)                        # (B,nc,Q,H)
+    # --- intra-chunk (quadratic/attention form) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc.astype(F32), Bc.astype(F32))
+    M = scores[..., None] * L                                # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M,
+                         dtc.astype(F32), xc.astype(F32))
+
+    # --- per-chunk states ---
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bc.astype(F32), (seg * dtc).astype(F32),
+                        xc.astype(F32))                       # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def step(s, inp):
+        dec, st = inp                                         # (B,H),(B,H,P,N)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s                                       # emit incoming
+
+    s0 = jnp.zeros((Bsz, H, P, N), F32)
+    final, incoming = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(states, 1, 0)))
+    incoming = jnp.moveaxis(incoming, 0, 1)                   # (B,nc,H,P,N)
+
+    # --- inter-chunk output ---
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cc.astype(F32), incoming, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssm_block(p, cfg: ModelConfig, x) -> jax.Array:
+    """Full-sequence Mamba-2 mixer. x: (B,S,d) -> (B,S,d)."""
+    Bsz, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+    z = x @ p["w_z"]                                       # (B,S,di)
+    xBC = _causal_conv(x @ p["w_xBC"], p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(F32)).astype(x.dtype)
+    xs = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(F32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                               # (H,) < 0
+    chunk = min(cfg.ssm_chunk, S)
+    if cfg.use_ssd_kernel:
+        from ..kernels.ssd_scan import ops as ssd_ops
+        y, _ = ssd_ops.ssd_scan(xs, dt, A, Bmat, Cmat, chunk=chunk)
+    else:
+        # pad S to multiple of chunk
+        pad = (-S) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+            Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        y, _ = _ssd_chunked(xs, dt, A, Bmat, Cmat, chunk)
+        y = y[:, :S]
+    y = y + p["D"][:, None] * xs[:, :S].astype(F32)
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"],
+                 cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def ssm_decode_step(p, cfg: ModelConfig, x, state, conv_state
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """O(1) recurrent decode. x: (B,1,d); state: (B,H,P,N);
+    conv_state: (B, conv_width-1, d_conv). Returns (y, state, conv_state)."""
+    Bsz = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = cfg.d_inner
+    z = x @ p["w_z"]
+    xBC_t = (x @ p["w_xBC"])[:, 0]                        # (B, d_conv)
+    hist = jnp.concatenate([conv_state, xBC_t[:, None]], axis=1)
+    conv = (hist * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+    conv = jax.nn.silu(conv.astype(F32)).astype(x.dtype)  # (B, d_conv)
+    xs = conv[:, :di].reshape(Bsz, H, P)
+    Bv = conv[:, di:di + N]
+    Cv = conv[:, di + N:]
+    dt = jax.nn.softplus((x[:, 0] @ p["w_dt"]).astype(F32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                # (B,H)
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xs.astype(F32),
+                          Bv.astype(F32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(F32), state)
+    y = y + p["D"][:, None] * xs.astype(F32)
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"],
+                 cfg.norm_eps)
+    return y @ p["w_out"], state, hist[:, 1:]

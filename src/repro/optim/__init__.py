@@ -1,0 +1,7 @@
+from .adamw import (AdamWConfig, adamw_init_specs, adamw_update,
+                    cosine_schedule, global_norm)
+from .compression import compress_grads, decompress_grads
+
+__all__ = ["AdamWConfig", "adamw_init_specs", "adamw_update",
+           "cosine_schedule", "global_norm", "compress_grads",
+           "decompress_grads"]

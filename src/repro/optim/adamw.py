@@ -1,0 +1,107 @@
+"""AdamW with fully-sharded fp32 master weights + moments.
+
+Optimizer state is declared as ParamSpec trees mirroring the model's
+logical axes, so ZeRO-3-style sharding falls out of the same rules as the
+parameters (DESIGN.md §4) and the dry-run can size it without allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.params import ParamSpec, is_spec, tree_map_specs
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # distributed-optimization knobs
+    grad_compression: str = "none"   # none | bf16 | int8
+    error_feedback: bool = True
+    state_dtype: str = "float32"     # moments dtype: float32 | bfloat16
+                                     # (masters always fp32)
+
+
+def adamw_init_specs(model_specs, state_dtype: str = "float32") -> dict:
+    """ParamSpec tree for optimizer state (same logical axes; moments in
+    ``state_dtype``, masters fp32)."""
+    def moment_like(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, dtype=state_dtype, init="zeros")
+
+    out = {
+        "mu": tree_map_specs(moment_like, model_specs),
+        "nu": tree_map_specs(moment_like, model_specs),
+        "master": tree_map_specs(
+            lambda s: dataclasses.replace(s, dtype="float32"), model_specs),
+        "step": ParamSpec((), (), dtype="int32", init="zeros"),
+    }
+    return out
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr_peak * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params
+                 ) -> Tuple[dict, dict, dict]:
+    """One step. Returns (new_params(bf16 views), new_opt_state, metrics).
+
+    params are the working (bf16) weights; opt_state["master"] holds fp32
+    masters; the bf16 weights are recast views of the updated masters.
+    """
+    step = opt_state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    def upd(g, mu, nu, master, p):
+        state_dt = mu.dtype              # moments math in f32, stored as-is
+        g = g.astype(F32) * scale
+        mu = cfg.b1 * mu.astype(F32) + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu.astype(F32) + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step.astype(F32))
+        nu_hat = nu / (1 - cfg.b2 ** step.astype(F32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        master = master - lr * (delta + cfg.weight_decay * master)
+        return (mu.astype(state_dt), nu.astype(state_dt), master,
+                master.astype(p.dtype))
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    flat_ma = jax.tree.leaves(opt_state["master"])
+    flat_p = jax.tree.leaves(params)
+    new_mu, new_nu, new_ma, new_p = [], [], [], []
+    for g, mu, nu, ma, p in zip(flat_g, flat_mu, flat_nu, flat_ma, flat_p):
+        a, b, c, d = upd(g, mu, nu, ma, p)
+        new_mu.append(a)
+        new_nu.append(b)
+        new_ma.append(c)
+        new_p.append(d)
+    new_opt = {"mu": jax.tree.unflatten(treedef, new_mu),
+               "nu": jax.tree.unflatten(treedef, new_nu),
+               "master": jax.tree.unflatten(treedef, new_ma),
+               "step": step}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return jax.tree.unflatten(treedef, new_p), new_opt, metrics

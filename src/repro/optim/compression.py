@@ -1,0 +1,62 @@
+"""Gradient compression for cross-pod all-reduce (distributed-opt trick).
+
+Cross-pod links (DCI) are the scarcest bandwidth in a multi-pod mesh; we
+compress gradients before the data-parallel reduction: bf16 cast or int8
+with per-tensor scale, with an *error-feedback* residual so compression
+noise is fed back into the next step (1-bit-Adam-style convergence
+guarantee shape). The hook lives between loss.grad and adamw_update.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def compress_grads(grads, method: str, residual=None):
+    """Returns (compressed_tree, new_residual). residual matches grads."""
+    if method == "none":
+        return grads, residual
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, F32), grads)
+
+    def comp(g, r):
+        g = g.astype(F32) + r
+        if method == "bf16":
+            q = g.astype(jnp.bfloat16)
+            back = q.astype(F32)
+        elif method == "int8":
+            scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            back = q.astype(F32) * scale
+            q = (q, scale)
+        else:
+            raise ValueError(method)
+        return q, g - back
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, rs = [], []
+    for g, r in zip(flat, flat_r):
+        q, nr = comp(g, r)
+        qs.append(q)
+        rs.append(nr)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, rs))
+
+
+def decompress_grads(comp, method: str):
+    if method == "none":
+        return comp
+    if method == "bf16":
+        return jax.tree.map(lambda q: q.astype(F32), comp)
+    if method == "int8":
+        def dec(q):
+            arr, scale = q
+            return arr.astype(F32) * scale
+        return jax.tree.map(dec, comp,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    raise ValueError(method)

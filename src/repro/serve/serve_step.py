@@ -1,0 +1,58 @@
+"""Serving steps: batched prefill and single-token decode.
+
+``serve_step`` is what the decode_* dry-run shapes lower: one new token for
+every sequence in the batch against a KV cache (or recurrent state) of the
+cell's seq_len. Greedy sampling keeps the step closed (token in, token out).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+def make_serve_step(model, cfg: ModelConfig):
+    def serve_step(params, cache, token, index):
+        """token: (B,1) int32; index: scalar int32 position.
+        Returns (next_token (B,1), logits (B,1,V), new_cache)."""
+        logits, cache = model.decode_step(params, cache, token, index)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(model, cfg: ModelConfig):
+    """Prompt -> (last-token logits[, cache]).
+
+    dense/moe: full KV-cache construction (the real serving prefill path);
+    ssm/hybrid/vlm: forward + last-position logits (cache extraction is an
+    O(state) epilogue, omitted from the lowered step);
+    encdec: encoder + cross-KV construction (decoder prompt is 1 BOS).
+    """
+    if cfg.family in ("dense", "moe") and cfg.frontend == "none":
+        def prefill(params, tokens):
+            logits, cache = model.prefill(params, tokens,
+                                          cache_len=tokens.shape[1])
+            return logits, cache
+        return prefill
+    if cfg.family == "encdec":
+        def prefill(params, frames):
+            memory = model.encode(params, frames)
+            xk, xv = model.build_cross_cache(params, memory)
+            return memory[:, -1:], (xk, xv)
+        return prefill
+    if cfg.frontend == "patch_stub":
+        def prefill(params, tokens, embeds):
+            logits, _ = model.forward(params, tokens, embeds=embeds)
+            return logits[:, -1:]
+        return prefill
+
+    def prefill(params, tokens):
+        logits, _ = model.forward(params, tokens)
+        return logits[:, -1:]
+
+    return prefill

@@ -1,0 +1,7 @@
+from .sharding import (ShardingPlan, batch_pspec, constrain, make_plan,
+                       resolve_specs, set_activation_plan, use_plan)
+from .train_step import make_train_step, loss_fn
+
+__all__ = ["ShardingPlan", "batch_pspec", "constrain", "make_plan",
+           "resolve_specs", "set_activation_plan", "use_plan",
+           "make_train_step", "loss_fn"]

@@ -1,0 +1,190 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+This is the curve-partition idea (paper C3) generalized: every parameter /
+cache dim carries a logical name; an ordered candidate list maps names to
+mesh axes; resolution checks divisibility and one-mesh-axis-per-leaf
+uniqueness in two passes (primary, then fallback), so ANY of the 10
+architectures (9 heads, 10 heads, kv=1, 128 experts, ...) resolves to a
+legal GSPMD sharding on the production mesh without per-arch hand edits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.params import ParamSpec, is_spec, tree_map_specs
+
+Candidate = Union[None, str, Tuple[str, ...]]
+
+
+def default_rules(multi_pod: bool) -> Dict[str, List[Candidate]]:
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # weights: FSDP over data(+pod) on the model dim, TP over model
+        "embed": [dp, ("data",), None],
+        "vocab": [("model",), None],
+        "heads": [("model",), None],
+        "kv_heads": [("model",), None],
+        "ff": [("model",), None],
+        "experts": [("model",), None],
+        "rnn": [("model",), None],
+        "inner": [("model",), None],
+        "layers": [None],
+        # activations / caches
+        "batch": [dp, ("data",), None],
+        "kv_len": [None, ("model",)],     # fallback: sequence-shard cache
+        "kv_heads_cache": [("model",), None],
+        "heads_cache": [("model",), None],
+        # activation constraints (see constrain())
+        "act_batch": [dp, ("data",), None],
+        "act_seq": [None],
+        "act_embed": [None],
+        "act_heads": [("model",), None],
+        "act_ff": [("model",), None],
+        "act_vocab": [("model",), None],
+        "act_experts": [("model",), None],
+    }
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: Dict[str, List[Candidate]]
+    multi_pod: bool
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+
+def make_plan(mesh: Mesh, multi_pod: Optional[bool] = None,
+              rules: Optional[Dict[str, List[Candidate]]] = None
+              ) -> ShardingPlan:
+    if multi_pod is None:
+        multi_pod = "pod" in mesh.axis_names
+    return ShardingPlan(mesh, rules or default_rules(multi_pod), multi_pod)
+
+
+def _axes_size(mesh: Mesh, cand: Candidate) -> int:
+    if cand is None:
+        return 1
+    names = (cand,) if isinstance(cand, str) else cand
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def _axes_names(cand: Candidate) -> Tuple[str, ...]:
+    if cand is None:
+        return ()
+    return (cand,) if isinstance(cand, str) else tuple(cand)
+
+
+def resolve_leaf(spec: ParamSpec, plan: ShardingPlan) -> P:
+    """Two-pass assignment: primary candidates first, fallbacks second."""
+    mesh = plan.mesh
+    used: set = set()
+    assign: List[Candidate] = [None] * len(spec.shape)
+
+    def try_assign(dim: int, cand: Candidate) -> bool:
+        names = _axes_names(cand)
+        if any(n in used for n in names):
+            return False
+        if names and spec.shape[dim] % _axes_size(mesh, cand) != 0:
+            return False
+        assign[dim] = cand
+        used.update(names)
+        return True
+
+    # pass 1: primary candidate per named dim
+    for dim, name in enumerate(spec.axes):
+        if name is None:
+            continue
+        cands = plan.rules.get(name, [None])
+        if cands and _axes_names(cands[0]):
+            try_assign(dim, cands[0])
+    # pass 2: fallbacks for still-unassigned named dims
+    for dim, name in enumerate(spec.axes):
+        if name is None or assign[dim] is not None:
+            continue
+        for cand in plan.rules.get(name, [None])[1:]:
+            if cand is None:
+                break
+            if try_assign(dim, cand):
+                break
+    return P(*assign)
+
+
+def resolve_specs(specs, plan: ShardingPlan):
+    """ParamSpec tree -> PartitionSpec tree."""
+    return tree_map_specs(lambda s: resolve_leaf(s, plan), specs)
+
+
+def resolve_shardings(specs, plan: ShardingPlan):
+    return tree_map_specs(
+        lambda s: NamedSharding(plan.mesh, resolve_leaf(s, plan)), specs)
+
+
+def batch_pspec(plan: ShardingPlan, rank: int, batch_size: int) -> P:
+    """Activation sharding: batch dim over DP axes (with divisibility
+    fallback for e.g. long_500k's global_batch=1)."""
+    for cand in [plan.dp_axes, ("data",), None]:
+        if cand is None:
+            return P(*([None] * rank))
+        if batch_size % _axes_size(plan.mesh, cand) == 0:
+            return P(cand, *([None] * (rank - 1)))
+    return P(*([None] * rank))
+
+
+# --- activation sharding constraints -----------------------------------
+#
+# GSPMD propagation alone mis-shards activations when params are FSDP-
+# sharded on contracting dims (e.g. the embedding gather inherits the
+# table's d_model sharding and drops batch sharding). Production JAX
+# frameworks pin activations explicitly; models call ``constrain(x, ...)``
+# with logical names, resolved against the active plan (no-op when unset,
+# e.g. in single-device tests).
+
+_ACTIVE_PLAN: List[Optional[ShardingPlan]] = [None]
+
+
+def set_activation_plan(plan: Optional[ShardingPlan]) -> None:
+    _ACTIVE_PLAN[0] = plan
+
+
+class use_plan:
+    def __init__(self, plan: ShardingPlan):
+        self.plan = plan
+
+    def __enter__(self):
+        self.prev = _ACTIVE_PLAN[0]
+        _ACTIVE_PLAN[0] = self.plan
+        return self.plan
+
+    def __exit__(self, *exc):
+        _ACTIVE_PLAN[0] = self.prev
+        return False
+
+
+def constrain(x, names: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axis names (divisibility-safe)."""
+    plan = _ACTIVE_PLAN[0]
+    if plan is None:
+        return x
+    spec = ParamSpec(tuple(x.shape), tuple(names), dtype="float32")
+    p = resolve_leaf(spec, plan)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, p))
+
+
+def abstract_sharded(specs, plan: ShardingPlan):
+    """ShapeDtypeStruct tree with shardings attached (dry-run inputs)."""
+    import jax.numpy as jnp
+
+    def one(s: ParamSpec):
+        sh = NamedSharding(plan.mesh, resolve_leaf(s, plan))
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype), sharding=sh)
+
+    return tree_map_specs(one, specs)

@@ -1,0 +1,7 @@
+from .synapse_detector import (connected_components, detect_synapses,
+                               difference_of_gaussians, gaussian_blur,
+                               large_structure_mask, run_parallel_detection)
+
+__all__ = ["connected_components", "detect_synapses",
+           "difference_of_gaussians", "gaussian_blur",
+           "large_structure_mask", "run_parallel_detection"]

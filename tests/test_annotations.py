@@ -1,0 +1,154 @@
+"""Annotation projects: metadata, disciplines, exceptions, index, analysis."""
+import numpy as np
+import pytest
+
+from repro.core.annotations import Annotation, AnnotationProject
+from repro.core.cuboid import DatasetSpec
+from repro.core.store import MemoryBackend
+
+
+def image_spec(shape=(64, 64, 32), n_res=1):
+    return DatasetSpec(name="img", volume_shape=shape, n_resolutions=n_res,
+                       dtype="uint8", base_cuboid=(16, 16, 8))
+
+
+@pytest.fixture
+def proj():
+    return AnnotationProject("anno", image_spec(), enable_exceptions=True)
+
+
+def blob(val, shape=(6, 6, 6)):
+    return np.full(shape, val, dtype=np.uint32)
+
+
+def test_metadata_crud_and_predicates(proj):
+    s1 = proj.meta.create(ann_type="synapse", confidence=0.995, weight=1.5)
+    s2 = proj.meta.create(ann_type="synapse", confidence=0.4)
+    seg = proj.meta.create(ann_type="segment", neuron=12)
+    assert proj.meta.query(("ann_type", "eq", "synapse")) == [s1.ann_id,
+                                                             s2.ann_id]
+    # paper example: objects/type/synapse/confidence/geq/0.99
+    assert proj.meta.query(("ann_type", "eq", "synapse"),
+                           ("confidence", "geq", 0.99)) == [s1.ann_id]
+    assert proj.meta.query(("neuron", "eq", 12)) == [seg.ann_id]
+    proj.meta.update(s2.ann_id, confidence=0.999, custom_field="x")
+    assert proj.meta.get(s2.ann_id).kv["custom_field"] == "x"
+    proj.meta.delete(seg.ann_id)
+    assert proj.meta.get(seg.ann_id) is None
+
+
+def test_write_read_and_region_query(proj):
+    a = proj.meta.create(ann_type="synapse")
+    proj.write(0, (2, 3, 4), blob(a.ann_id))
+    out = proj.read(0, (2, 3, 4), (8, 9, 10))
+    assert (out == a.ann_id).all()
+    assert proj.objects_in_region(0, (0, 0, 0), (16, 16, 16)) == [a.ann_id]
+    assert proj.objects_in_region(0, (32, 32, 16), (64, 64, 32)) == []
+
+
+def test_object_cutout_filters_other_ids(proj):
+    a = proj.meta.create()
+    b = proj.meta.create()
+    proj.write(0, (0, 0, 0), blob(a.ann_id, (8, 8, 8)))
+    proj.write(0, (8, 0, 0), blob(b.ann_id, (8, 8, 8)))
+    lo, dense = proj.object_cutout(a.ann_id, 0)
+    assert set(np.unique(dense)) <= {0, a.ann_id}
+    assert (dense == a.ann_id).sum() == 8 * 8 * 8
+
+
+def test_voxel_list_sparse_object(proj):
+    a = proj.meta.create()
+    vol = np.zeros((16, 16, 8), np.uint32)
+    pts = [(0, 0, 0), (15, 15, 7), (3, 9, 2)]
+    for p in pts:
+        vol[p] = a.ann_id
+    proj.write(0, (8, 8, 8), vol)
+    vl = proj.voxel_list(a.ann_id, 0)
+    got = {tuple(r) for r in vl.tolist()}
+    assert got == {(8 + x, 8 + y, 8 + z) for x, y, z in pts}
+
+
+def test_index_runs_and_bbox(proj):
+    a = proj.meta.create()
+    proj.write(0, (0, 0, 0), blob(a.ann_id, (32, 8, 8)))
+    cubes = proj.index.cuboids(a.ann_id)
+    assert cubes == sorted(cubes) and len(cubes) == 2
+    bbox = proj.bounding_box(a.ann_id, 0)
+    lo, hi = bbox
+    assert lo == [0, 0, 0]
+    assert hi[0] >= 32 and hi[1] >= 8 and hi[2] >= 8
+
+
+def test_exceptions_discipline(proj):
+    a, b = proj.meta.create(), proj.meta.create()
+    proj.write(0, (0, 0, 0), blob(a.ann_id, (4, 4, 4)))
+    proj.write(0, (0, 0, 0), blob(b.ann_id, (4, 4, 4)),
+               discipline="exception")
+    # primary label preserved; second label recorded as exception
+    labels = proj.voxel_labels(0, (1, 1, 1))
+    assert set(labels) == {a.ann_id, b.ann_id}
+    # a voxel not multiply labeled has one label
+    proj.write(0, (8, 8, 8), blob(b.ann_id, (2, 2, 2)))
+    assert proj.voxel_labels(0, (8, 8, 8)) == [b.ann_id]
+
+
+def test_exception_requires_enable():
+    p = AnnotationProject("noexc", image_spec(), enable_exceptions=False)
+    a = p.meta.create()
+    with pytest.raises(ValueError):
+        p.write(0, (0, 0, 0), blob(a.ann_id), discipline="exception")
+
+
+def test_readonly_project():
+    p = AnnotationProject("ro", image_spec(), readonly=True)
+    with pytest.raises(PermissionError):
+        p.write(0, (0, 0, 0), blob(1))
+
+
+def test_deferred_propagation():
+    p = AnnotationProject("hier", image_spec(n_res=2))
+    a = p.meta.create()
+    p.write(0, (0, 0, 0), blob(a.ann_id, (8, 8, 8)))
+    # visible at write resolution, stale elsewhere (paper §3.2)
+    assert p.pending_propagation
+    assert not p.read(1, (0, 0, 0), (4, 4, 8)).any()
+    p.propagate()
+    assert not p.pending_propagation
+    out = p.read(1, (0, 0, 0), (4, 4, 8))
+    assert (out == a.ann_id).all()
+
+
+def test_batch_write_objects(proj):
+    objs = [(Annotation(0, ann_type="synapse", confidence=0.9 + i / 100),
+             (i * 8, 0, 0), np.ones((4, 4, 4), np.uint32))
+            for i in range(3)]
+    ids = proj.batch_write_objects(0, objs)
+    assert len(set(ids)) == 3
+    got = proj.batch_read_objects(ids, 0)
+    for i in ids:
+        lo, dense = got[i]
+        assert (dense == i).sum() == 64
+
+
+def test_distance_and_centroid(proj):
+    a, b = proj.meta.create(), proj.meta.create()
+    va = np.zeros((4, 4, 4), np.uint32)
+    va[0, 0, 0] = a.ann_id
+    vb = np.zeros((4, 4, 4), np.uint32)
+    vb[0, 0, 0] = b.ann_id
+    proj.write(0, (0, 0, 0), va)
+    proj.write(0, (10, 0, 0), vb)
+    assert proj.distance(a.ann_id, b.ann_id, 0) == pytest.approx(10.0)
+    np.testing.assert_allclose(proj.centroid(a.ann_id, 0), [0, 0, 0])
+
+
+def test_write_path_backend_for_annotations():
+    p = AnnotationProject("ssd", image_spec(),
+                          write_path_backend=MemoryBackend())
+    a = p.meta.create()
+    p.write(0, (0, 0, 0), blob(a.ann_id))
+    assert len(list(p.store.write_backend.keys())) > 0
+    assert len(list(p.store.read_backend.keys())) == 0
+    p.store.migrate()
+    assert len(list(p.store.write_backend.keys())) == 0
+    assert (p.read(0, (0, 0, 0), (2, 2, 2)) == a.ann_id).all()

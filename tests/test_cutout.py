@@ -1,0 +1,178 @@
+"""Cutout engine vs numpy-slicing oracle (paper §4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cuboid import CuboidGrid, DatasetSpec
+from repro.core.cutout import (CutoutStats, batch_cutout, build_hierarchy,
+                               cutout, ingest, project, write_cutout)
+from repro.core.store import CuboidStore, MemoryBackend
+
+
+def make_store(shape=(64, 64, 32), cuboid=(16, 16, 8), dtype="uint8",
+               n_res=1, write_path=False):
+    spec = DatasetSpec(name="t", volume_shape=shape, n_resolutions=n_res,
+                       dtype=dtype, base_cuboid=cuboid)
+    return CuboidStore(
+        spec, write_path_backend=MemoryBackend() if write_path else None)
+
+
+@pytest.fixture(scope="module")
+def loaded():
+    rng = np.random.default_rng(0)
+    vol = rng.integers(1, 255, size=(64, 64, 32), dtype=np.uint8)
+    store = make_store()
+    ingest(store, 0, vol)
+    return store, vol
+
+
+def boxes(shape):
+    return st.tuples(*[st.tuples(st.integers(0, s - 1), st.integers(1, s))
+                       for s in shape]).map(
+        lambda t: ([min(a, b - 1) for a, b in t], [max(a + 1, b) for a, b in t]))
+
+
+@given(box=boxes((64, 64, 32)))
+@settings(max_examples=60, deadline=None)
+def test_cutout_matches_numpy(loaded, box):
+    store, vol = loaded
+    lo, hi = box
+    got = cutout(store, 0, lo, hi)
+    want = vol[tuple(slice(l, h) for l, h in zip(lo, hi))]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cutout_stats_alignment(loaded):
+    store, vol = loaded
+    s_al, s_un = CutoutStats(), CutoutStats()
+    cutout(store, 0, (16, 16, 8), (48, 48, 24), stats=s_al)
+    cutout(store, 0, (17, 17, 9), (49, 49, 25), stats=s_un)
+    assert s_al.bytes_discarded == 0
+    assert s_un.bytes_discarded > 0  # unaligned reads+discards (Fig 10)
+    assert s_un.cuboids_read >= s_al.cuboids_read
+
+
+def test_aligned_box_single_run(loaded):
+    store, _ = loaded
+    stats = CutoutStats()
+    cutout(store, 0, (0, 0, 0), (32, 32, 16), stats=stats)
+    assert stats.runs == 1  # pow2-aligned => contiguous on the curve
+
+
+def test_write_disciplines():
+    store = make_store(dtype="uint32")
+    a = np.full((8, 8, 8), 7, dtype=np.uint32)
+    write_cutout(store, 0, (0, 0, 0), a)
+    b = np.full((8, 8, 8), 9, dtype=np.uint32)
+    write_cutout(store, 0, (4, 4, 4), b, discipline="preserve")
+    out = cutout(store, 0, (0, 0, 0), (12, 12, 12))
+    assert (out[:8, :8, :8] == 7).all()           # preserved
+    assert (out[8:, 8:, 8:] == 9).all()           # new region written
+    write_cutout(store, 0, (4, 4, 4), b, discipline="overwrite")
+    out = cutout(store, 0, (4, 4, 4), (12, 12, 12))
+    assert (out == 9).all()
+
+
+def test_write_zero_voxels_do_not_clobber():
+    store = make_store(dtype="uint32")
+    write_cutout(store, 0, (0, 0, 0), np.full((8, 8, 8), 5, np.uint32))
+    patch = np.zeros((8, 8, 8), np.uint32)
+    patch[0, 0, 0] = 6
+    write_cutout(store, 0, (0, 0, 0), patch, discipline="overwrite")
+    out = cutout(store, 0, (0, 0, 0), (8, 8, 8))
+    assert out[0, 0, 0] == 6
+    assert (out.ravel()[1:] == 5).all()  # zeros in data leave old labels
+
+
+def test_lazy_allocation():
+    store = make_store()
+    # nothing written: reads are zeros, storage is empty
+    out = cutout(store, 0, (0, 0, 0), (64, 64, 32))
+    assert not out.any()
+    assert store.storage_bytes() == 0
+    write_cutout(store, 0, (0, 0, 0), np.ones((4, 4, 4), np.uint8))
+    assert store.storage_bytes() > 0
+    assert len(store.stored_keys()) == 1  # only the touched cuboid
+
+
+def test_write_path_separation_and_migration():
+    store = make_store(write_path=True)
+    write_cutout(store, 0, (0, 0, 0), np.ones((16, 16, 8), np.uint8))
+    # all writes landed on the write path (SSD node)
+    assert store.write_stats.writes > 0
+    assert len(list(store.read_backend.keys())) == 0
+    assert len(list(store.write_backend.keys())) == 1
+    # reads see the fresh data through the write path
+    assert cutout(store, 0, (0, 0, 0), (2, 2, 2)).all()
+    n = store.migrate()
+    assert n == 1
+    assert len(list(store.write_backend.keys())) == 0
+    assert cutout(store, 0, (0, 0, 0), (2, 2, 2)).all()
+
+
+def test_projection_slice_and_mip(loaded):
+    store, vol = loaded
+    tile = project(store, 0, (0, 0, 5), (64, 64, 6), axis=2)
+    np.testing.assert_array_equal(tile, vol[:, :, 5])
+    mip = project(store, 0, (0, 0, 0), (64, 64, 32), axis=2, reduce="max")
+    np.testing.assert_array_equal(mip, vol.max(axis=2))
+
+
+def test_batch_cutout(loaded):
+    store, vol = loaded
+    bxs = [((0, 0, 0), (8, 8, 8)), ((10, 11, 12), (20, 21, 22))]
+    outs = batch_cutout(store, 0, bxs)
+    for (lo, hi), out in zip(bxs, outs):
+        np.testing.assert_array_equal(
+            out, vol[tuple(slice(l, h) for l, h in zip(lo, hi))])
+
+
+def test_anisotropic_hierarchy():
+    spec = DatasetSpec(name="h", volume_shape=(64, 64, 16), n_resolutions=3,
+                       dtype="float32", base_cuboid=(16, 16, 8))
+    store = CuboidStore(spec)
+    rng = np.random.default_rng(1)
+    vol = rng.random((64, 64, 16), dtype=np.float32)
+    ingest(store, 0, vol)
+    build_hierarchy(store)
+    # level 1: X,Y halve, Z unchanged (paper Fig 5)
+    g1 = spec.grid(1)
+    assert g1.volume_shape == (32, 32, 16)
+    got = cutout(store, 1, (0, 0, 0), (32, 32, 16))
+    want = vol.reshape(32, 2, 32, 2, 16).mean(axis=(1, 3)).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    g2 = spec.grid(2)
+    assert g2.volume_shape == (16, 16, 16)
+
+
+def test_cuboid_shapes_flat_then_cubic():
+    spec = DatasetSpec(name="b", volume_shape=(4096, 4096, 512),
+                       n_resolutions=6)
+    assert spec.grid(0).cuboid_shape == (128, 128, 16)   # flat at high res
+    assert spec.grid(5).cuboid_shape == (64, 64, 64)     # cubic past level 4
+    for r in range(6):
+        cs = spec.grid(r).cuboid_shape
+        assert np.prod(cs) <= (1 << 18)  # paper: 256K voxels per cuboid
+
+
+def test_4d_timeseries_curve():
+    spec = DatasetSpec(name="ts", volume_shape=(32, 32, 8, 16),
+                       scaled_dims=(0, 1), base_cuboid=(8, 8, 4, 4))
+    store = CuboidStore(spec, )
+    rng = np.random.default_rng(2)
+    vol = rng.integers(0, 255, size=(32, 32, 8, 16), dtype=np.uint8)
+    ingest(store, 0, vol)
+    got = cutout(store, 0, (3, 4, 1, 2), (19, 22, 7, 13))
+    np.testing.assert_array_equal(got, vol[3:19, 4:22, 1:7, 2:13])
+
+
+def test_multichannel_separate_cuboids():
+    spec = DatasetSpec(name="ch", volume_shape=(16, 16, 8), n_channels=3,
+                       base_cuboid=(8, 8, 4), dtype="uint16")
+    store = CuboidStore(spec)
+    for c in range(3):
+        write_cutout(store, 0, (0, 0, 0),
+                     np.full((16, 16, 8), c + 1, np.uint16), channel=c)
+    for c in range(3):
+        assert (cutout(store, 0, (0, 0, 0), (16, 16, 8), channel=c)
+                == c + 1).all()

@@ -1,0 +1,162 @@
+"""Continuous batching: per-sequence decode positions + slot scheduler.
+
+The correctness bar: every request generated through the shared-slot
+engine must produce EXACTLY the tokens it would produce decoded alone
+(greedy decoding is deterministic; slots must not leak state).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.params import init_params
+from repro.serve import ContinuousBatcher, Request
+
+RNG = np.random.default_rng(7)
+
+
+def small_cfg(arch="minitron_8b", **kw):
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                vocab=97, dtype="float32")
+    base.update(kw)
+    return get_config(arch).scaled(**base)
+
+
+def reference_decode(model, params, prompt, max_new, cache_len):
+    """Single-request greedy decode through decode_step (B=1)."""
+    from repro.models.params import ParamSpec
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        model.cache_specs(1, cache_len),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    out = []
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    for pos in range(len(prompt) + max_new - 1):
+        logits, cache = model.decode_step(params, cache, tok,
+                                          jnp.int32(pos))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        if pos + 1 < len(prompt):
+            tok = jnp.asarray([[prompt[pos + 1]]], jnp.int32)
+        else:
+            out.append(nxt)
+            tok = jnp.asarray([[nxt]], jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ["minitron_8b", "granite_moe_1b_a400m"])
+def test_continuous_batching_matches_solo_decode(arch):
+    kw = {}
+    if arch == "granite_moe_1b_a400m":
+        kw = dict(n_experts=4, top_k=2, d_ff=64)
+    cfg = small_cfg(arch, **kw)
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(0))
+    prompts = [RNG.integers(0, cfg.vocab, size=n).tolist()
+               for n in (3, 5, 8, 4)]
+    max_new = 6
+    eng = ContinuousBatcher(model, cfg, params, n_slots=2, cache_len=32)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid, p, max_new))
+    got = eng.run()
+    assert set(got) == set(range(len(prompts)))
+    assert eng.occupancy > 0.5          # slots stay busy under backlog
+    for rid, p in enumerate(prompts):
+        want = reference_decode(model, params, p, max_new, cache_len=32)
+        assert got[rid] == want, (rid, got[rid], want)
+
+
+def test_continuous_batching_eos_frees_slot():
+    cfg = small_cfg()
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(1))
+    # find the first greedy token of a probe prompt, use it as EOS so the
+    # request terminates immediately after one generated token
+    probe = [5, 11, 23]
+    first = reference_decode(model, params, probe, 1, cache_len=32)[0]
+    eng = ContinuousBatcher(model, cfg, params, n_slots=1, cache_len=32)
+    eng.submit(Request(0, probe, max_new=8, eos_id=first))
+    eng.submit(Request(1, [4, 2], max_new=2))
+    got = eng.run()
+    assert got[0] == [first]            # stopped at EOS, not max_new
+    assert len(got[1]) == 2             # queued request got the slot
+
+
+def test_per_seq_index_matches_scalar_index():
+    """decode_step with (B,) index == scalar index when all positions
+    agree (the continuous-batching plumbing is a strict generalization)."""
+    cfg = small_cfg()
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(2))
+    tok = jnp.asarray(RNG.integers(0, cfg.vocab, size=(3, 12)), jnp.int32)
+    _, cache = model.prefill(params, tok, cache_len=16)
+    nxt = jnp.asarray([[1], [2], [3]], jnp.int32)
+    lg_scalar, _ = model.decode_step(params, cache, nxt, jnp.int32(12))
+    lg_vec, _ = model.decode_step(params, cache, nxt,
+                                  jnp.asarray([12, 12, 12], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_scalar), np.asarray(lg_vec),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_hybrid_per_seq_index():
+    """Hybrid (rotating-window cache) also supports vector positions."""
+    cfg = get_config("recurrentgemma_2b").scaled(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=1, d_ff=128,
+        vocab=97, d_rnn=64, local_window=8, dtype="float32")
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(3))
+    from repro.models.params import ParamSpec
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        model.cache_specs(2, 16),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    tok = jnp.asarray([[5], [9]], jnp.int32)
+    lg_s, _ = model.decode_step(params, cache, tok, jnp.int32(0))
+    lg_v, _ = model.decode_step(params, cache, tok,
+                                jnp.asarray([0, 0], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_v),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_encdec_per_seq_index():
+    """Encoder-decoder decode also supports vector positions."""
+    cfg = get_config("seamless_m4t_medium").scaled(
+        n_layers=2, n_enc_layers=2, n_dec_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=97, dtype="float32")
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(5))
+    from repro.models.params import ParamSpec
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+        model.cache_specs(2, 12, enc_len=8),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+    # fill cross K/V from a stub encoder memory
+    mem = jnp.asarray(RNG.normal(size=(2, 8, 64)), jnp.float32)
+    xk, xv = model.build_cross_cache(params, mem)
+    cache = jax.tree.map(lambda c: c, cache)
+    cache["decoder"]["xk"] = jnp.moveaxis(xk, 0, 0)
+    cache["decoder"]["xv"] = jnp.moveaxis(xv, 0, 0)
+    tok = jnp.asarray([[5], [9]], jnp.int32)
+    lg_s, _ = model.decode_step(params, cache, tok, jnp.int32(3))
+    lg_v, _ = model.decode_step(params, cache, tok,
+                                jnp.asarray([3, 3], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_v),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_ssm_continuous_batching():
+    """Attention-free family through the slot engine (state caches)."""
+    cfg = get_config("mamba2_370m").scaled(
+        n_layers=2, d_model=64, ssm_state=16, ssm_head_dim=16,
+        vocab=97, ssm_chunk=8, dtype="float32")
+    model = build_model(cfg)
+    params = init_params(model.specs(), jax.random.key(6))
+    prompts = [RNG.integers(0, cfg.vocab, size=n).tolist() for n in (3, 6)]
+    eng = ContinuousBatcher(model, cfg, params, n_slots=1, cache_len=24)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid, p, 4))
+    got = eng.run()
+    for rid, p in enumerate(prompts):
+        want = reference_decode(model, params, p, 4, cache_len=24)
+        assert got[rid] == want, (rid, got[rid], want)

@@ -1,0 +1,155 @@
+"""Sharding-rule resolution tests: every arch must resolve to legal specs."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.params import ParamSpec, is_spec
+from repro.train.sharding import (default_rules, make_plan, resolve_leaf,
+                                  resolve_specs, batch_pspec)
+
+
+class FakeMesh:
+    """Shape-only stand-in so rule tests don't need 256 devices."""
+
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+    @property
+    def size(self):
+        v = 1
+        for s in self.shape.values():
+            v *= s
+        return v
+
+
+def plan16x16():
+    return make_plan(FakeMesh({"data": 16, "model": 16}), multi_pod=False)
+
+
+def plan2x16x16():
+    return make_plan(FakeMesh({"pod": 2, "data": 16, "model": 16}),
+                     multi_pod=True)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("plan_fn", [plan16x16, plan2x16x16])
+def test_all_arch_params_resolve(arch, plan_fn):
+    """Every param dim's assignment divides; no mesh axis used twice."""
+    plan = plan_fn()
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = model.specs()
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    assert leaves
+    for s in leaves:
+        p = resolve_leaf(s, plan)
+        used = []
+        for dim, cand in enumerate(p):
+            if cand is None:
+                continue
+            names = (cand,) if isinstance(cand, str) else cand
+            size = int(np.prod([plan.mesh.shape[n] for n in names]))
+            assert s.shape[dim] % size == 0, (arch, s.shape, s.axes, p)
+            used += list(names)
+        assert len(used) == len(set(used)), (arch, s.axes, p)
+
+
+def test_fsdp_and_tp_assignment():
+    plan = plan16x16()
+    s = ParamSpec((1024, 4096), ("embed", "ff"))
+    assert resolve_leaf(s, plan) == P(("data",), ("model",))
+
+
+def test_divisibility_fallback_drops_axis():
+    plan = plan16x16()
+    # 9 kv heads: not divisible by 16 -> replicated, kv_len picks up model
+    s = ParamSpec((32, 32768, 9, 64),
+                  ("batch", "kv_len", "kv_heads_cache", None))
+    p = resolve_leaf(s, plan)
+    assert p[2] is None
+    assert p[1] in ("model", ("model",))  # sequence-sharded cache
+    assert p[0] in ("data", ("data",))
+
+
+def test_kv_heads_shardable_keeps_seq_replicated():
+    plan = plan16x16()
+    s = ParamSpec((8, 32768, 16, 64),
+                  ("batch", "kv_len", "kv_heads_cache", None))
+    p = resolve_leaf(s, plan)
+    assert p[2] in ("model", ("model",))
+    assert p[1] is None
+
+
+def test_batch_pspec_fallbacks():
+    plan = plan2x16x16()
+    assert batch_pspec(plan, 2, 256) == P(("pod", "data"), None)
+    assert batch_pspec(plan, 2, 16) == P(("data",), None)   # pod drop
+    assert batch_pspec(plan, 2, 1) == P(None, None)         # replicate
+
+
+def test_multi_pod_fsdp_over_both_axes():
+    plan = plan2x16x16()
+    s = ParamSpec((16384, 53248), ("embed", "ff"))
+    assert resolve_leaf(s, plan) == P(("pod", "data"), ("model",))
+
+
+@pytest.mark.parametrize("arch", ["arctic_480b", "granite_moe_1b_a400m"])
+def test_experts_map_to_model_axis(arch):
+    plan = plan16x16()
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = model.specs()
+    moe_leaf = jax.tree.leaves(
+        {"w": specs["blocks"]["moe"]["w_gate"]}, is_leaf=is_spec)[0]
+    p = resolve_leaf(moe_leaf, plan)
+    # (layers, experts, d, ff): experts on model axis (EP)
+    assert p[1] in ("model", ("model",))
+
+
+def test_weight_stationary_decode_rules():
+    """§Perf decode variant: batch replicated, weights stay sharded."""
+    from repro.launch.hillclimb import _rules_weight_stationary
+    rules = _rules_weight_stationary(default_rules(False))
+    plan = make_plan(FakeMesh({"data": 16, "model": 16}), multi_pod=False,
+                     rules=rules)
+    # weight (embed, ff): embed over data, ff over model — unchanged shards
+    assert resolve_leaf(ParamSpec((16384, 53248), ("embed", "ff")),
+                        plan) == P(("data",), ("model",))
+    # kv cache: batch replicated, seq over data
+    p = resolve_leaf(ParamSpec((128, 32768, 8, 128),
+                               ("batch", "kv_len", "kv_heads_cache", None)),
+                     plan)
+    assert p[0] is None and p[1] in ("data", ("data",))
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@given(data=st.data())
+@settings(max_examples=50, deadline=None)
+def test_resolve_leaf_properties(data):
+    """Any ParamSpec resolves to a legal assignment: all sharded dims
+    divide, no mesh axis is used twice."""
+    plan = data.draw(st.sampled_from([plan16x16(), plan2x16x16()]))
+    names = list(default_rules(plan.multi_pod))
+    rank = data.draw(st.integers(1, 4))
+    axes = tuple(data.draw(st.sampled_from(names + [None]))
+                 for _ in range(rank))
+    shape = tuple(data.draw(st.sampled_from([1, 2, 9, 16, 56, 128, 256,
+                                             4096]))
+                  for _ in range(rank))
+    s = ParamSpec(shape, axes)
+    p = resolve_leaf(s, plan)
+    used = []
+    for dim, cand in enumerate(p):
+        if cand is None:
+            continue
+        ns = (cand,) if isinstance(cand, str) else cand
+        size = int(np.prod([plan.mesh.shape[n] for n in ns]))
+        assert shape[dim] % size == 0
+        used += list(ns)
+    assert len(used) == len(set(used))
