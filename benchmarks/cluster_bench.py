@@ -1,0 +1,111 @@
+"""Cluster + planned-cutout benchmarks (the PR's speed acceptance).
+
+Two stories, paper-shaped:
+
+  * ``planned vs loop``: the planned batch cutout (one `get_many` per run,
+    one decompression per blob, vectorized assembly) against the seed
+    per-cuboid Python loop (`cutout_loop`) on a >=256^3 volume — the
+    speedup row is the BENCH_* trajectory the issue asks for.
+  * ``shards``: the same cutout load over a `ClusterStore` with 1/2/4
+    nodes (paper Fig 11: throughput from parallel spatially-partitioned
+    nodes), plus the write->migrate path.
+
+``BENCH_PRESET=tiny`` (or ``run.py --preset tiny``) shrinks the volume so
+the CI smoke job finishes in seconds; the full preset keeps the 256^3
+acceptance volume.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import ClusterStore
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, cutout_loop, ingest, write_cutout
+from repro.core.store import CuboidStore
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    # acceptance: planned-vs-loop speedup measured on a >=256^3 volume
+    return (64, 64, 64) if preset() == "tiny" else (256, 256, 256)
+
+
+def _spec(shape):
+    return DatasetSpec(name="cluster_bench", volume_shape=shape,
+                       dtype="uint8", base_cuboid=(64, 64, 16))
+
+
+def _boxes(shape, n, seed=11):
+    """Unaligned cutout boxes covering ~1/8 of the volume each."""
+    rng = np.random.default_rng(seed)
+    size = tuple(max(8, s // 2) for s in shape)
+    out = []
+    for _ in range(n):
+        lo = tuple(int(rng.integers(1, s - sz)) for s, sz in zip(shape, size))
+        out.append((lo, tuple(l + sz for l, sz in zip(lo, size))))
+    return out
+
+
+def _timed(fn, boxes, repeats=1):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for lo, hi in boxes:
+            fn(lo, hi)
+    return (time.perf_counter() - t0) / (repeats * len(boxes))
+
+
+def planned_vs_loop() -> List[Dict]:
+    shape = _shape()
+    store = CuboidStore(_spec(shape))
+    vol = np.random.default_rng(5).integers(0, 255, size=shape,
+                                            dtype=np.uint8)
+    ingest(store, 0, vol)
+    boxes = _boxes(shape, n=4)
+    t_loop = _timed(lambda lo, hi: cutout_loop(store, 0, lo, hi), boxes)
+    t_plan = _timed(lambda lo, hi: cutout(store, 0, lo, hi), boxes)
+    mb = float(np.prod([s // 2 for s in shape])) / 1e6
+    return [
+        {"name": f"cluster/loop/{shape[0]}", "us_per_call": t_loop * 1e6,
+         "derived": f"{mb / t_loop:.1f}MBps"},
+        {"name": f"cluster/planned/{shape[0]}", "us_per_call": t_plan * 1e6,
+         "derived": f"{mb / t_plan:.1f}MBps"},
+        {"name": f"cluster/planned_speedup/{shape[0]}", "us_per_call": 0.0,
+         "derived": f"{t_loop / t_plan:.2f}x_vs_loop"},
+    ]
+
+
+def shard_scaling() -> List[Dict]:
+    shape = _shape()
+    vol = np.random.default_rng(6).integers(0, 255, size=shape,
+                                            dtype=np.uint8)
+    boxes = _boxes(shape, n=4, seed=12)
+    rows = []
+    for n_nodes in (1, 2, 4):
+        cluster = ClusterStore(_spec(shape), n_nodes=n_nodes)
+        t0 = time.perf_counter()
+        write_cutout(cluster, 0, (0, 0, 0), vol)
+        t_write = time.perf_counter() - t0
+        t_read = _timed(lambda lo, hi: cutout(cluster, 0, lo, hi), boxes)
+        t0 = time.perf_counter()
+        n_migrated = cluster.migrate()
+        t_migrate = time.perf_counter() - t0
+        mb = vol.nbytes / 1e6
+        rows.append({"name": f"cluster/shards{n_nodes}/read",
+                     "us_per_call": t_read * 1e6,
+                     "derived": f"{(mb / 8) / t_read:.1f}MBps"})
+        rows.append({"name": f"cluster/shards{n_nodes}/write_migrate",
+                     "us_per_call": (t_write + t_migrate) * 1e6,
+                     "derived": f"migrated{n_migrated}"})
+        cluster.close()
+    return rows
+
+
+def rows() -> List[Dict]:
+    return planned_vs_loop() + shard_scaling()

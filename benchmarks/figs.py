@@ -8,6 +8,7 @@ write-path offload).
 from __future__ import annotations
 
 import concurrent.futures as cf
+import os
 import tempfile
 import time
 from typing import Dict, List, Tuple
@@ -16,10 +17,19 @@ import numpy as np
 
 from repro.core.annotations import Annotation, AnnotationProject
 from repro.core.cuboid import DatasetSpec
-from repro.core.cutout import CutoutStats, cutout, ingest, write_cutout
+from repro.core.cutout import cutout, ingest
 from repro.core.store import CuboidStore, DirectoryBackend, MemoryBackend
 
 CUBOID = (64, 64, 16)
+
+
+def _tiny() -> bool:
+    """CI smoke preset (run.py --preset tiny): fewer/smaller requests."""
+    return os.environ.get("BENCH_PRESET") == "tiny"
+
+
+def _sizes():
+    return (32, 64) if _tiny() else (32, 64, 128)
 
 
 def _make_volume(shape=(256, 256, 64), seed=0, entropy="high"):
@@ -64,7 +74,7 @@ def fig10_cutout_throughput() -> List[Dict]:
     ingest(disk_store, 0, vol)
     rng = np.random.default_rng(1)
     rows = []
-    for size in (32, 64, 128):
+    for size in _sizes():
         n_req = max(2, 16 // (size // 32))
         aligned, unaligned = [], []
         for _ in range(n_req):
@@ -100,7 +110,7 @@ def fig11_concurrency() -> List[Dict]:
         z = int(rng.integers(0, 48))
         boxes.append(((x, x, z), (x + 64, x + 64, z + 16)))
     rows = []
-    for workers in (1, 2, 4, 8):
+    for workers in ((1, 4) if _tiny() else (1, 2, 4, 8)):
         dt, mb = _timed_cutouts(store, boxes, n_workers=workers)
         rows.append({"name": f"fig11/parallel/{workers}",
                      "us_per_call": dt / len(boxes) * 1e6,
@@ -116,7 +126,7 @@ def fig12_annotation_write() -> List[Dict]:
                        dtype="uint8", base_cuboid=CUBOID)
     rows = []
     rng = np.random.default_rng(3)
-    for size in (32, 64, 128):
+    for size in _sizes():
         proj = AnnotationProject("w", spec)
         labels = (rng.integers(1, 6, size=(size, size, size // 4))
                   .astype(np.uint32))      # >90% labeled, low entropy

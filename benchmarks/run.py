@@ -1,9 +1,14 @@
 """Benchmark driver: one section per paper table/figure + kernel/roofline.
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement).
-Roofline rows are read from dryrun_results.json when present (produced by
+Prints ``name,us_per_call,derived`` CSV (one row per measurement); with
+``--json PATH`` the same rows are also written as a JSON array (the CI
+bench-smoke artifact, so BENCH_* trajectories accumulate across PRs).
+``--preset tiny`` shrinks volumes for smoke runs, ``--sections a,b``
+restricts to named sections.  Roofline rows are read from
+dryrun_results.json when present (produced by
 ``python -m repro.launch.dryrun --all --mesh both --out dryrun_results.json``).
 """
+import argparse
 import json
 import os
 import sys
@@ -35,31 +40,57 @@ def roofline_rows():
     return rows
 
 
-def main() -> None:
-    from . import figs, kernels_bench
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--preset", choices=("tiny", "full"), default=None,
+                        help="tiny = CI smoke sizes (sets BENCH_PRESET)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write rows as a JSON array")
+    parser.add_argument("--sections", default=None,
+                        help="comma-separated section filter, e.g. "
+                             "fig10,cluster")
+    args = parser.parse_args(argv)
+    if args.preset:
+        os.environ["BENCH_PRESET"] = args.preset
+
+    from . import cluster_bench, figs, kernels_bench
 
     sections = [
         ("fig10", figs.fig10_cutout_throughput),
         ("fig11", figs.fig11_concurrency),
         ("fig12", figs.fig12_annotation_write),
         ("fig13", figs.fig13_write_paths),
+        ("cluster", cluster_bench.rows),
         ("curves", kernels_bench.curve_panel_traffic),
         ("attn", kernels_bench.attention_paths),
         ("ssd", kernels_bench.ssd_duality),
         ("moe", kernels_bench.moe_padding_elision),
         ("roofline", roofline_rows),
     ]
+    if args.sections:
+        wanted = set(args.sections.split(","))
+        unknown = wanted - {label for label, _ in sections}
+        if unknown:
+            parser.error(f"unknown sections: {sorted(unknown)}")
+        sections = [(label, fn) for label, fn in sections if label in wanted]
+
     print("name,us_per_call,derived")
+    all_rows = []
     failures = 0
     for label, fn in sections:
         try:
             for row in fn():
                 print(f"{row['name']},{row['us_per_call']:.1f},"
                       f"{row['derived']}")
+                all_rows.append(row)
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{label}/ERROR,0.0,{type(e).__name__}:{e}",
                   file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"preset": os.environ.get("BENCH_PRESET", "full"),
+                       "rows": all_rows}, f, indent=1)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,28 @@
+"""Spatially-partitioned data cluster (paper §4.1): sharded stores,
+stateless routing, and the RESTful-style service verbs over them."""
+
+from .handlers import (
+    HANDLERS,
+    VolumeService,
+    dispatch,
+    get_annotation_bbox,
+    get_cutout,
+    get_object_cutout,
+    get_projection,
+    put_cutout,
+)
+from .router import Router
+from .store import ClusterStore
+
+__all__ = [
+    "ClusterStore",
+    "Router",
+    "VolumeService",
+    "HANDLERS",
+    "dispatch",
+    "get_cutout",
+    "put_cutout",
+    "get_projection",
+    "get_annotation_bbox",
+    "get_object_cutout",
+]

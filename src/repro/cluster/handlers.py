@@ -1,0 +1,196 @@
+"""RESTful-style data-service verbs over the cluster (paper §4.2).
+
+The paper's Web services expose cutout / annotation queries as stateless
+HTTP verbs; any front-end can serve any request because state lives in the
+data cluster.  We reproduce that contract transport-free: every handler is
+a pure ``(service, request dict) -> response dict`` function — no sockets,
+no framework — so it composes with `repro.serve` (or any HTTP shim) and is
+trivially testable.  Verb strings mirror the paper's URL forms
+(``GET /cutout``, ``objects/.../boundingbox``, ...).
+
+Requests name a dataset or annotation project by key; volumes travel as
+numpy arrays by default or zlib blobs with ``{"encode": "zlib"}`` (the
+paper returns compressed volumes on the wire).  Responses always carry an
+integer ``status`` using HTTP conventions.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from ..core.annotations import AnnotationProject
+from ..core.cutout import CutoutStats, cutout, project, write_cutout
+
+Request = Dict[str, Any]
+Response = Dict[str, Any]
+
+# Malformed client input must come back as a 4xx dict, never an exception:
+# missing keys, bad ints/shapes, corrupt zlib payloads, non-iterable boxes.
+_BAD_REQUEST = (KeyError, ValueError, IndexError, TypeError, zlib.error)
+
+
+class VolumeService:
+    """Registry of datasets and annotation projects behind the verbs.
+
+    The service itself is stateless routing glue: all durable state lives
+    in the registered stores (single-node `CuboidStore` or sharded
+    `ClusterStore` — the verbs do not care which, that is C3).
+    """
+
+    def __init__(self):
+        self.datasets: Dict[str, Any] = {}
+        self.projects: Dict[str, AnnotationProject] = {}
+
+    def add_dataset(self, name: str, store) -> None:
+        self.datasets[name] = store
+
+    def add_project(self, name: str, proj: AnnotationProject) -> None:
+        self.projects[name] = proj
+
+
+def _error(status: int, message: str) -> Response:
+    return {"status": status, "error": message}
+
+
+def _encode_volume(vol: np.ndarray, request: Request) -> Response:
+    body: Response = {"status": 200, "shape": tuple(vol.shape), "dtype": str(vol.dtype)}
+    if request.get("encode") == "zlib":
+        body["data"] = zlib.compress(np.ascontiguousarray(vol).tobytes(), 1)
+        body["encode"] = "zlib"
+    else:
+        body["data"] = vol
+    return body
+
+
+def _decode_volume(request: Request) -> np.ndarray:
+    data = request["data"]
+    if request.get("encode") == "zlib":
+        raw = zlib.decompress(data)
+        return np.frombuffer(raw, dtype=np.dtype(request["dtype"])).reshape(request["shape"])
+    return np.asarray(data)
+
+
+def _box(request: Request):
+    lo = [int(x) for x in request["lo"]]
+    hi = [int(x) for x in request["hi"]]
+    return lo, hi
+
+
+def get_cutout(service: VolumeService, request: Request) -> Response:
+    """``GET /<dataset>/cutout/<r>/<lo>/<hi>`` — dense sub-volume read."""
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    try:
+        r = int(request.get("resolution", 0))
+        lo, hi = _box(request)
+        stats = CutoutStats()
+        vol = cutout(store, r, lo, hi, channel=int(request.get("channel", 0)), stats=stats)
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad cutout request: {e}")
+    body = _encode_volume(vol, request)
+    body["cuboids_read"] = stats.cuboids_read
+    body["runs"] = stats.runs
+    return body
+
+
+def put_cutout(service: VolumeService, request: Request) -> Response:
+    """``PUT /<dataset>/cutout/<r>/<lo>`` — dense sub-volume write."""
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    try:
+        r = int(request.get("resolution", 0))
+        lo = [int(x) for x in request["lo"]]
+        data = _decode_volume(request)
+        write_cutout(
+            store,
+            r,
+            lo,
+            data,
+            channel=int(request.get("channel", 0)),
+            discipline=request.get("discipline", "overwrite"),
+        )
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad write request: {e}")
+    return {"status": 200, "written_shape": tuple(data.shape)}
+
+
+def get_projection(service: VolumeService, request: Request) -> Response:
+    """``GET /<dataset>/xy/...`` — tile/MIP: a cutout with one axis reduced."""
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    try:
+        r = int(request.get("resolution", 0))
+        lo, hi = _box(request)
+        tile = project(
+            store,
+            r,
+            lo,
+            hi,
+            axis=int(request.get("axis", 2)),
+            reduce=request.get("reduce", "slice"),
+            channel=int(request.get("channel", 0)),
+        )
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad projection request: {e}")
+    return _encode_volume(tile, request)
+
+
+def get_annotation_bbox(service: VolumeService, request: Request) -> Response:
+    """``GET /objects/<id>/boundingbox`` — index-only, no voxel I/O."""
+    proj = service.projects.get(request.get("project"))
+    if proj is None:
+        return _error(404, f"unknown project {request.get('project')!r}")
+    try:
+        ann_id = int(request["id"])
+        r = int(request.get("resolution", 0))
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad boundingbox request: {e}")
+    bbox = proj.bounding_box(ann_id, r)
+    if bbox is None:
+        return _error(404, f"object {ann_id} has no voxels")
+    lo, hi = bbox
+    return {"status": 200, "id": ann_id, "lo": list(lo), "hi": list(hi)}
+
+
+def get_object_cutout(service: VolumeService, request: Request) -> Response:
+    """``GET /objects/<id>/cutout`` — one object's voxels, others masked."""
+    proj = service.projects.get(request.get("project"))
+    if proj is None:
+        return _error(404, f"unknown project {request.get('project')!r}")
+    try:
+        ann_id = int(request["id"])
+        r = int(request.get("resolution", 0))
+        box = None
+        if "lo" in request and "hi" in request:
+            box = _box(request)
+        lo, vol = proj.object_cutout(ann_id, r, box)
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad object cutout request: {e}")
+    body = _encode_volume(vol, request)
+    body["id"] = ann_id
+    body["lo"] = list(lo)
+    return body
+
+
+HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
+    "GET /cutout": get_cutout,
+    "PUT /cutout": put_cutout,
+    "GET /projection": get_projection,
+    "GET /objects/boundingbox": get_annotation_bbox,
+    "GET /objects/cutout": get_object_cutout,
+}
+
+
+def dispatch(service: VolumeService, request: Request, verb: Optional[str] = None) -> Response:
+    """Route one request dict by its ``verb`` key (stateless: any caller)."""
+    verb = verb or request.get("verb")
+    handler = HANDLERS.get(verb)
+    if handler is None:
+        return _error(405, f"unknown verb {verb!r}")
+    return handler(service, request)

@@ -1,0 +1,84 @@
+"""Stateless request routing over a Morton-curve partition (paper §4.1 C3).
+
+The paper shards a dataset across database nodes by partitioning the Morton
+curve into contiguous segments; any front-end web server can route any
+request because ownership is a pure function of (dataset spec, node count,
+morton index) — no routing table, no directory service.  :class:`Router` is
+that pure function made explicit: it owns no sockets and no state, so a
+`ClusterStore` holds one and so could a fleet of stateless web front-ends.
+
+Partitioning is per resolution level (each level has its own curve length);
+every node therefore owns a spatially compact region at *every* level, and
+runs within one node stay sequential (paper: reads on a node are few long
+sequential I/Os even after sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from ..core import morton
+from ..core.cuboid import DatasetSpec
+
+Runs = morton.Runs
+
+
+@dataclasses.dataclass(frozen=True)
+class Router:
+    """Pure ownership function for a curve-partitioned dataset."""
+
+    spec: DatasetSpec
+    n_nodes: int
+
+    def __post_init__(self):
+        if self.n_nodes <= 0:
+            raise ValueError("n_nodes must be positive")
+
+    def n_cells(self, r: int) -> int:
+        return self.spec.grid(r).n_cells
+
+    def segments(self, r: int) -> List[Tuple[int, int]]:
+        """The curve partition at resolution ``r``: node i owns segment i."""
+        return morton.partition_curve(self.n_cells(r), self.n_nodes)
+
+    def owner(self, r: int, m: int) -> int:
+        """Owning node of one morton index."""
+        return int(morton.owner_of(m, self.n_cells(r), self.n_nodes))
+
+    def owners(self, r: int, cells) -> np.ndarray:
+        """Vectorized owner lookup for an array of morton indexes."""
+        cells = np.asarray(cells, dtype=np.int64)
+        return morton.owner_of(cells, self.n_cells(r), self.n_nodes)
+
+    def split_run(self, r: int, start: int, stop: int) -> List[Tuple[int, int, int]]:
+        """Split one curve run at partition boundaries.
+
+        Returns [(node, start, stop), ...] in curve order — each piece is
+        wholly owned by one node, so node-local I/O stays sequential.
+        """
+        pieces = []
+        segments = self.segments(r)
+        node = self.owner(r, start)
+        while start < stop:
+            piece_stop = min(stop, segments[node][1])
+            pieces.append((node, start, piece_stop))
+            start = piece_stop
+            node += 1
+        return pieces
+
+    def split_runs(self, r: int, runs: Runs) -> Dict[int, Runs]:
+        """Group a run schedule by owning node: {node: runs on that node}."""
+        by_node: Dict[int, Runs] = {}
+        for start, stop in runs:
+            for node, a, b in self.split_run(r, start, stop):
+                by_node.setdefault(node, []).append((a, b))
+        return by_node
+
+    def group_cells(self, r: int, cells) -> Dict[int, np.ndarray]:
+        """Group loose morton indexes by owning node (write routing)."""
+        cells = np.asarray(cells, dtype=np.int64)
+        owners = self.owners(r, cells)
+        return {int(n): cells[owners == n] for n in np.unique(owners)}

@@ -1,0 +1,167 @@
+"""Spatially-partitioned cluster store (paper §4.1).
+
+A :class:`ClusterStore` owns N node shards — each a full `CuboidStore` with
+its own read/write backends and `PathStats` (the paper's database node with
+a disk-array read path and an SSD write path) — and routes every cuboid and
+run to its owning node with a stateless :class:`Router`.  It implements the
+same storage interface the cutout engine drives (`fetch_runs`,
+`store_cuboids`, `read_cuboid`, ...), so `cutout()` / `write_cutout()` work
+unchanged over a cluster, and batch I/O fans out across nodes in parallel
+(one thread per touched node: the paper's parallel-requests doctrine C8
+applied *inside* one request).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.cuboid import DatasetSpec
+from ..core.store import CuboidStore, Key, MemoryBackend, PathStats
+from .router import Router
+
+NodeFactory = Callable[[int, DatasetSpec], CuboidStore]
+
+
+def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
+    """In-memory node with a separated write path (SSD-node analogue)."""
+    return CuboidStore(spec, backend=MemoryBackend(), write_path_backend=MemoryBackend())
+
+
+def _sum_stats(parts: Sequence[PathStats]) -> PathStats:
+    out = PathStats()
+    for p in parts:
+        out.reads += p.reads
+        out.read_bytes += p.read_bytes
+        out.writes += p.writes
+        out.write_bytes += p.write_bytes
+        out.seeks += p.seeks
+        out.time_s += p.time_s
+    return out
+
+
+class ClusterStore:
+    """N `CuboidStore` shards behind one storage interface.
+
+    ``node_factory(i, spec)`` builds shard ``i`` — supply it to give nodes
+    directory backends, distinct write paths, etc.  ``max_workers`` bounds
+    per-request node parallelism (default: one worker per node; ``0``/``1``
+    forces serial fan-out, useful for deterministic profiling).
+    """
+
+    def __init__(
+        self,
+        spec: DatasetSpec,
+        n_nodes: int = 2,
+        node_factory: Optional[NodeFactory] = None,
+        max_workers: Optional[int] = None,
+    ):
+        self.spec = spec
+        self.router = Router(spec, n_nodes)
+        factory = node_factory or _default_node_factory
+        self.nodes: List[CuboidStore] = [factory(i, spec) for i in range(n_nodes)]
+        workers = n_nodes if max_workers is None else max_workers
+        if workers > 1:
+            self._pool = cf.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="ocp-node")
+        else:
+            self._pool = None
+
+    # -- cluster admin -----------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _fan_out(self, jobs: Dict[int, Callable[[], object]]) -> Dict[int, object]:
+        """Run one job per touched node, in parallel when a pool exists."""
+        if self._pool is None or len(jobs) <= 1:
+            return {n: job() for n, job in jobs.items()}
+        futures = {n: self._pool.submit(job) for n, job in jobs.items()}
+        return {n: f.result() for n, f in futures.items()}
+
+    # -- single-cuboid ops (routed) ----------------------------------------
+    def read_cuboid(self, r: int, m: int, channel: int = 0) -> np.ndarray:
+        return self.nodes[self.router.owner(r, m)].read_cuboid(r, m, channel)
+
+    def write_cuboid(self, r: int, m: int, data: np.ndarray, channel: int = 0) -> None:
+        self.nodes[self.router.owner(r, m)].write_cuboid(r, m, data, channel)
+
+    def has_cuboid(self, r: int, m: int, channel: int = 0) -> bool:
+        return self.nodes[self.router.owner(r, m)].has_cuboid(r, m, channel)
+
+    # -- batch ops (routed + parallel) -------------------------------------
+    def read_run(self, r: int, start: int, stop: int, channel: int = 0) -> List[np.ndarray]:
+        """Run read in curve order, split at partition boundaries."""
+        out: List[np.ndarray] = []
+        for node, a, b in self.router.split_run(r, start, stop):
+            out.extend(self.nodes[node].read_run(r, a, b, channel))
+        return out
+
+    def fetch_runs(
+        self,
+        r: int,
+        runs: Sequence[Tuple[int, int]],
+        channel: int = 0,
+    ) -> Dict[int, Optional[bytes]]:
+        """Batch blob fetch: split runs by owner, fetch nodes in parallel."""
+        by_node = self.router.split_runs(r, list(runs))
+        jobs = {
+            node: functools.partial(self.nodes[node].fetch_runs, r, node_runs, channel)
+            for node, node_runs in by_node.items()
+        }
+        merged: Dict[int, Optional[bytes]] = {}
+        for part in self._fan_out(jobs).values():
+            merged.update(part)
+        return merged
+
+    def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray], channel: int = 0) -> None:
+        """Batch write: group blocks by owner, write nodes in parallel."""
+        by_node: Dict[int, Dict[int, np.ndarray]] = {}
+        for m, data in blocks.items():
+            by_node.setdefault(self.router.owner(r, m), {})[m] = data
+        jobs = {
+            node: functools.partial(self.nodes[node].store_cuboids, r, node_blocks, channel)
+            for node, node_blocks in by_node.items()
+        }
+        self._fan_out(jobs)
+
+    # -- maintenance / introspection ---------------------------------------
+    def migrate(self) -> int:
+        """Flush every node's write path into its read path (SSD→DB)."""
+        jobs = {i: self.nodes[i].migrate for i in range(self.n_nodes)}
+        return sum(self._fan_out(jobs).values())
+
+    def stored_keys(self) -> List[Key]:
+        keys: List[Key] = []
+        for node in self.nodes:
+            keys.extend(node.stored_keys())
+        return sorted(keys)
+
+    def storage_bytes(self) -> int:
+        return sum(node.storage_bytes() for node in self.nodes)
+
+    def keys_per_node(self) -> List[int]:
+        """Shard occupancy (the rebalancing signal for later PRs)."""
+        return [len(node.stored_keys()) for node in self.nodes]
+
+    @property
+    def read_stats(self) -> PathStats:
+        """Cluster-aggregate read-path stats (per-node stats on `nodes`)."""
+        return _sum_stats([n.read_stats for n in self.nodes])
+
+    @property
+    def write_stats(self) -> PathStats:
+        return _sum_stats([n.write_stats for n in self.nodes])

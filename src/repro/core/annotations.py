@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -123,15 +123,23 @@ class AnnotationProject:
                  enable_exceptions: bool = False,
                  readonly: bool = False,
                  backend: Optional[Backend] = None,
-                 write_path_backend: Optional[Backend] = None):
+                 write_path_backend: Optional[Backend] = None,
+                 store_factory: Optional[Callable[[DatasetSpec], Any]] = None):
+        """``store_factory(spec)`` overrides the default single-node store —
+        pass e.g. ``lambda s: ClusterStore(s, n_nodes=4)`` to hold the label
+        database sharded across the cluster (paper §4.1: annotation projects
+        are distributed exactly like image datasets)."""
         self.name = name
         spec = dataclasses.replace(
             image_spec, name=f"{image_spec.name}/{name}",
             dtype="uint32", n_channels=1)
         self.spec = spec
-        self.store = CuboidStore(spec, backend=backend,
-                                 write_path_backend=write_path_backend,
-                                 compression_level=1)
+        if store_factory is not None:
+            self.store = store_factory(spec)
+        else:
+            self.store = CuboidStore(spec, backend=backend,
+                                     write_path_backend=write_path_backend,
+                                     compression_level=1)
         self.meta = MetadataTable()
         self.index = ObjectIndex()
         self.enable_exceptions = enable_exceptions

@@ -17,8 +17,7 @@ data pipeline (`repro.data`): a global batch is a cutout of the token grid.
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +26,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import morton
 from .cuboid import CuboidGrid
+
+try:  # jax >= 0.6: public jax.shard_map with the check_vma kwarg
+    _public_shard_map = jax.shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _public_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+except AttributeError:  # jax 0.4.x: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _experimental_sm
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _experimental_sm(f, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_rep=False)
 
 
 def pack_to_cuboids(volume: np.ndarray, grid: CuboidGrid) -> np.ndarray:
@@ -124,8 +136,8 @@ def distributed_cutout(packed: jax.Array, grid: CuboidGrid,
         return jax.lax.all_gather(picked, axis)            # (n_dev,max_k,*cs)
 
     gathered = jax.jit(
-        jax.shard_map(gather_local, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_vma=False)
+        _shard_map(gather_local, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs)
     )(packed, local_idx_j)                                 # replicated
 
     flat = gathered.reshape((n_dev * max_k,) + tuple(cs))
@@ -210,8 +222,8 @@ def distributed_write_cutout(packed: jax.Array, grid: CuboidGrid,
         return jax.lax.fori_loop(0, dblk.shape[0], body, shard)
 
     updated = jax.jit(
-        jax.shard_map(apply_local, mesh=mesh,
-                      in_specs=(pspec, rep, rep, rep, rep),
-                      out_specs=pspec)
+        _shard_map(apply_local, mesh=mesh,
+                   in_specs=(pspec, rep, rep, rep, rep),
+                   out_specs=pspec)
     )(packed, dblocks, mblocks, cells_j, seg_starts)
     return updated

@@ -54,6 +54,25 @@ class ObjectIndex:
                 out.append((m, m + 1))
         return out
 
+    def partitioned_runs(self, ann_id: int,
+                         segments: Sequence[Tuple[int, int]]
+                         ) -> Dict[int, List[Tuple[int, int]]]:
+        """Object runs grouped by curve segment (cluster object reads).
+
+        ``segments`` is a curve partition (`morton.partition_curve` order:
+        segment i = node i).  Each object run is clipped at segment
+        boundaries, so every returned run is wholly owned by one node and
+        node-local reads stay sequential — the paper's object retrieval
+        (Fig 9) routed across the cluster.
+        """
+        by_part: Dict[int, List[Tuple[int, int]]] = {}
+        for start, stop in self.runs(ann_id):
+            for i, (seg_lo, seg_hi) in enumerate(segments):
+                a, b = max(start, seg_lo), min(stop, seg_hi)
+                if a < b:
+                    by_part.setdefault(i, []).append((a, b))
+        return by_part
+
     def bounding_box(self, ann_id: int,
                      grid: CuboidGrid) -> Tuple[List[int], List[int]] | None:
         """Cuboid-resolution bounding box from the index alone (no voxel IO).

@@ -19,7 +19,7 @@ import os
 import threading
 import time
 import zlib
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,6 +59,17 @@ class Backend:
     def __contains__(self, key: Key) -> bool:
         return self.get(key) is not None
 
+    # -- batch ops (paper C7: a cutout is few sequential I/Os, not many
+    # random ones).  Backends override when they can do better than a loop.
+    def get_many(self, keys: Sequence[Key]) -> List[Optional[bytes]]:
+        """Fetch many blobs in one backend call (order preserved)."""
+        return [self.get(k) for k in keys]
+
+    def put_many(self, items: Sequence[Tuple[Key, bytes]]) -> None:
+        """Store many blobs in one backend call."""
+        for k, blob in items:
+            self.put(k, blob)
+
 
 class MemoryBackend(Backend):
     def __init__(self):
@@ -81,6 +92,14 @@ class MemoryBackend(Backend):
 
     def __contains__(self, key):
         return key in self._d
+
+    def get_many(self, keys):
+        d = self._d
+        return [d.get(k) for k in keys]
+
+    def put_many(self, items):
+        with self._lock:
+            self._d.update(items)
 
 
 class DirectoryBackend(Backend):
@@ -223,8 +242,73 @@ class CuboidStore:
     def read_run(self, r: int, start: int, stop: int,
                  channel: int = 0) -> List[np.ndarray]:
         """Read a contiguous morton run — ONE sequential pass (paper C7)."""
-        self.read_stats.seeks += 1
-        return [self.read_cuboid(r, m, channel) for m in range(start, stop)]
+        blobs = self.fetch_runs(r, [(start, stop)], channel)
+        shape = self._cuboid_shape(r)
+        return [self._zeros(r) if blobs[m] is None
+                else decompress(blobs[m], shape, self._np_dtype)
+                for m in range(start, stop)]
+
+    def fetch_runs(self, r: int, runs: Sequence[Tuple[int, int]],
+                   channel: int = 0) -> Dict[int, Optional[bytes]]:
+        """Batch-fetch compressed blobs for every cuboid in ``runs``.
+
+        One ``get_many`` per run per path (the planned-cutout substrate):
+        the write path is consulted first (freshest), misses fall through to
+        the read path, absent cuboids come back as ``None`` (lazy zeros).
+        Returns {morton_index: blob | None}.
+        """
+        out: Dict[int, Optional[bytes]] = {}
+        for start, stop in runs:
+            t0 = time.perf_counter()
+            self.read_stats.seeks += 1
+            keys = [(r, channel, m) for m in range(start, stop)]
+            blobs: List[Optional[bytes]] = [None] * len(keys)
+            if self.write_backend is not None:
+                blobs = list(self.write_backend.get_many(keys))
+                hits = [b for b in blobs if b is not None]
+                self.write_stats.reads += len(hits)
+                self.write_stats.read_bytes += sum(len(b) for b in hits)
+            miss = [i for i, b in enumerate(blobs) if b is None]
+            if miss:
+                fetched = self.read_backend.get_many([keys[i] for i in miss])
+                for i, blob in zip(miss, fetched):
+                    blobs[i] = blob
+                self.read_stats.reads += len(miss)
+                self.read_stats.read_bytes += sum(
+                    len(b) for b in fetched if b is not None)
+            self.read_stats.time_s += time.perf_counter() - t0
+            for m, blob in zip(range(start, stop), blobs):
+                out[m] = blob
+        return out
+
+    def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray],
+                      channel: int = 0) -> None:
+        """Batch write: compress all blocks, then ONE ``put_many``.
+
+        Keeps the single-cuboid semantics: shape-checked, all-zero cuboids
+        are deleted rather than stored (lazy allocation, paper §3.2), writes
+        land on the write path when attached.
+        """
+        shape = self._cuboid_shape(r)
+        t0 = time.perf_counter()
+        target = self.write_backend or self.read_backend
+        puts: List[Tuple[Key, bytes]] = []
+        for m, data in blocks.items():
+            if tuple(data.shape) != shape:
+                raise ValueError(f"cuboid shape {data.shape} != {shape}")
+            key = (r, channel, m)
+            self.write_stats.writes += 1
+            if not data.any():
+                target.delete(key)
+                self.read_backend.delete(key)
+                continue
+            blob = compress(data.astype(self._np_dtype),
+                            self.compression_level)
+            self.write_stats.write_bytes += len(blob)
+            puts.append((key, blob))
+        if puts:
+            target.put_many(puts)
+        self.write_stats.time_s += time.perf_counter() - t0
 
     def migrate(self) -> int:
         """Flush write path into the read path (paper: SSD→DB migration)."""

@@ -20,7 +20,7 @@ import concurrent.futures as cf
 import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -15,11 +15,9 @@ paying the read-amplification the paper measures in Fig 10.
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 

@@ -1,7 +1,6 @@
 """jit'd cutout wrapper: box -> Morton plan -> gather kernel -> trim."""
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

@@ -5,7 +5,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import flash_attention_kernel
 

@@ -17,10 +17,9 @@ import json
 import sys
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import ARCH_IDS, get_config
 from ..models import build_model

@@ -7,14 +7,14 @@ decode -> serve_step(params, cache, token, index).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import build_model
-from ..models.config import ModelConfig, ShapeConfig, SHAPES
+from ..models.config import ModelConfig, ShapeConfig
 from ..models.params import ParamSpec, tree_map_specs
 from ..optim import adamw_init_specs
 from ..train.sharding import ShardingPlan, batch_pspec, resolve_leaf

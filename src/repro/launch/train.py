@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +25,8 @@ from ..configs import get_config, get_smoke_config
 from ..data import DataPipeline, PipelineConfig, TokenStore
 from ..ft import FailureInjector, StragglerMonitor, TrainingSupervisor
 from ..models import build_model, init_params
-from ..models.params import ParamSpec, tree_map_specs
 from ..optim import AdamWConfig, adamw_init_specs
 from ..train import make_train_step, use_plan, make_plan
-from ..train.sharding import resolve_shardings
 from .mesh import make_local_mesh, make_production_mesh
 
 

@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import (blockwise_attention, cache_insert, decode_attention,
-                     per_seq_positions, rms_norm, rms_norm_spec, rotary)
+from .layers import (blockwise_attention, cache_insert, decode_attention, per_seq_positions, rotary)
 from .params import ParamSpec
 
 

@@ -7,8 +7,7 @@ cache plus precomputed cross-attention K/V.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

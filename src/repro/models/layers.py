@@ -8,8 +8,7 @@ tiling for TPU and is validated against the jnp oracle.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

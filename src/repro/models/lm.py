@@ -9,13 +9,12 @@ knob. The encoder-decoder family lives in `encdec.py`.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .attention import (attention, attention_decode, attention_specs, qkv)
+from .attention import attention, attention_decode, attention_specs
 from .config import ModelConfig
 from .layers import decode_attention, mlp, mlp_specs, rms_norm, rms_norm_spec, rotary
 from .moe import moe, moe_specs
@@ -420,7 +419,6 @@ class LM:
                 (x,), params["blocks"])
             return self.logits(params, x[:, -1:]), {"blocks": kv}
         # ssm / hybrid: token-by-token through decode (reference path)
-        from .params import abstract_params, init_params
         cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
             self.cache_specs(B, cache_len),

@@ -11,7 +11,6 @@ expert-sharded layouts lowers to all-to-all — the EP dispatch collective.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -7,12 +7,12 @@ parameters (DESIGN.md §4) and the dry-run can size it without allocation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..models.params import ParamSpec, is_spec, tree_map_specs
+from ..models.params import ParamSpec, tree_map_specs
 
 F32 = jnp.float32
 

@@ -8,7 +8,6 @@ guarantee shape). The hook lives between loss.grad and adamw_update.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,14 @@
 from .serve_step import make_serve_step, make_prefill_step
-
-__all__ = ["make_serve_step", "make_prefill_step"]
 from .batcher import ContinuousBatcher, Request
+# The volume data-service verbs (paper §4.2) are served through the same
+# front door: stateless request-dict handlers over the data cluster.
+from ..cluster import VolumeService, dispatch as volume_dispatch
+
+__all__ = [
+    "make_serve_step",
+    "make_prefill_step",
+    "ContinuousBatcher",
+    "Request",
+    "VolumeService",
+    "volume_dispatch",
+]

@@ -6,7 +6,6 @@ cell's seq_len. Greedy sampling keeps the step closed (token in, token out).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

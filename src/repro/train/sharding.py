@@ -16,7 +16,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models.params import ParamSpec, is_spec, tree_map_specs
+from ..models.params import ParamSpec, tree_map_specs
 
 Candidate = Union[None, str, Tuple[str, ...]]
 

@@ -6,8 +6,7 @@ gradient-compression hook for cross-pod reductions.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.annotations import Annotation, AnnotationProject
-from ..core.cutout import CutoutStats, cutout
+from ..core.cutout import cutout
 from ..core.store import CuboidStore
 
 

@@ -1,0 +1,50 @@
+"""Graceful degradation when `hypothesis` is not installed.
+
+Tier-1 must *collect* everywhere (the seed failed at collection on the
+missing import).  ``from hypothesis import ...`` is replaced in test modules
+by ``from hypothesis_compat import given, settings, st, HAVE_HYPOTHESIS``:
+with hypothesis present these are the real objects; without it, ``st`` is an
+inert strategy stand-in (absorbs any attribute/call at decoration time) and
+``@given`` swaps the property test for a skipped stub — so oracle tests in
+the same module still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: property tests skip, the rest still run
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategy:
+        """Stand-in for `st.*`: evaluated only at decoration time."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _InertStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,241 @@
+"""Cluster-vs-single-store equivalence, routing, and the service verbs."""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterStore, Router, VolumeService, dispatch
+from repro.core.annotations import AnnotationProject
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import (CutoutStats, cutout, cutout_loop, ingest,
+                               plan_cutout, write_cutout)
+from repro.core.store import CuboidStore
+
+SHAPE = (64, 64, 32)
+CUBOID = (16, 16, 8)
+
+
+def spec(shape=SHAPE, dtype="uint8", **kw):
+    return DatasetSpec(name="c", volume_shape=shape, dtype=dtype,
+                       base_cuboid=CUBOID, **kw)
+
+
+def volume(shape=SHAPE, seed=0):
+    return np.random.default_rng(seed).integers(
+        1, 255, size=shape, dtype=np.uint8)
+
+
+BOXES = [
+    ((0, 0, 0), SHAPE),                    # full volume
+    ((0, 0, 0), (32, 32, 16)),             # pow2-aligned (single run)
+    ((3, 5, 1), (61, 59, 31)),             # unaligned interior
+    ((17, 1, 9), (18, 2, 10)),             # single voxel, unaligned
+    ((48, 48, 24), (64, 64, 32)),          # corner-touching
+]
+
+
+@pytest.mark.parametrize("n_nodes", [1, 2, 4])
+def test_cluster_cutouts_bit_identical(n_nodes):
+    vol = volume()
+    single = CuboidStore(spec())
+    ingest(single, 0, vol)
+    cluster = ClusterStore(spec(), n_nodes=n_nodes)
+    ingest(cluster, 0, vol)
+    for lo, hi in BOXES:
+        want = cutout(single, 0, lo, hi)
+        got = cutout(cluster, 0, lo, hi)
+        np.testing.assert_array_equal(got, want)
+        sl = tuple(slice(l, h) for l, h in zip(lo, hi))
+        np.testing.assert_array_equal(got, vol[sl])
+
+
+@pytest.mark.parametrize("n_nodes", [2, 4])
+def test_cluster_write_then_migrate_path(n_nodes):
+    """Writes land on each node's write path; cutouts are identical before
+    and after SSD->DB migration (the paper's dump-and-restore)."""
+    vol = volume(seed=3)
+    cluster = ClusterStore(spec(), n_nodes=n_nodes)
+    write_cutout(cluster, 0, (0, 0, 0), vol)
+    assert cluster.write_stats.writes > 0
+    before = cutout(cluster, 0, (2, 3, 4), (62, 60, 30))
+    migrated = cluster.migrate()
+    assert migrated == len(cluster.stored_keys())
+    after = cutout(cluster, 0, (2, 3, 4), (62, 60, 30))
+    np.testing.assert_array_equal(before, after)
+    # write paths fully drained
+    for node in cluster.nodes:
+        assert len(list(node.write_backend.keys())) == 0
+
+
+def test_cluster_partition_is_spatially_balanced():
+    cluster = ClusterStore(spec(), n_nodes=4)
+    ingest(cluster, 0, volume())
+    per_node = cluster.keys_per_node()
+    assert sum(per_node) == 64  # 4x4x4 cuboid grid
+    assert max(per_node) - min(per_node) <= 1  # contiguous curve segments
+
+
+def test_cluster_unaligned_write_roundtrip():
+    vol = volume()
+    single = CuboidStore(spec())
+    cluster = ClusterStore(spec(), n_nodes=4)
+    for store in (single, cluster):
+        ingest(store, 0, vol)
+        patch = np.full((7, 9, 5), 200, np.uint8)
+        write_cutout(store, 0, (13, 22, 9), patch)
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE),
+                                  cutout(single, 0, (0, 0, 0), SHAPE))
+
+
+def test_planned_cutout_matches_seed_loop():
+    """The planned batch path is bit-identical to the per-cuboid loop."""
+    vol = volume(seed=7)
+    store = CuboidStore(spec())
+    ingest(store, 0, vol)
+    for lo, hi in BOXES:
+        s_plan, s_loop = CutoutStats(), CutoutStats()
+        got = cutout(store, 0, lo, hi, stats=s_plan)
+        want = cutout_loop(store, 0, lo, hi, stats=s_loop)
+        np.testing.assert_array_equal(got, want)
+        assert s_plan.cuboids_read == s_loop.cuboids_read
+        assert s_plan.runs == s_loop.runs
+        assert s_plan.bytes_discarded == s_loop.bytes_discarded
+
+
+def test_plan_covers_exact_cells():
+    grid = spec().grid(0)
+    plan = plan_cutout(grid, 0, [0, 0, 0], [32, 32, 16])
+    assert len(plan.runs) == 1          # pow2-aligned: one sequential run
+    assert len(plan.cells) == 8         # 2x2x2 cuboids
+    # every cell's buffer slice stays inside the buffer
+    for sl, keep in zip(plan.buf_slices, plan.keep_shapes):
+        for s, k, b in zip(sl, keep, plan.buf_shape):
+            assert 0 <= s.start < s.stop <= b
+            assert s.stop - s.start == k
+
+
+def test_router_split_runs_cover_and_stay_sorted():
+    router = Router(spec(), 3)
+    grid = spec().grid(0)
+    runs = grid.box_to_runs([0, 0, 0], SHAPE)
+    by_node = router.split_runs(0, runs)
+    cells = []
+    for node, node_runs in by_node.items():
+        seg_lo, seg_hi = router.segments(0)[node]
+        for a, b in node_runs:
+            assert seg_lo <= a < b <= seg_hi  # pieces never cross nodes
+            cells.extend(range(a, b))
+    assert sorted(cells) == sorted(
+        m for a, b in runs for m in range(a, b))
+
+
+def test_cluster_store_read_write_cuboid_routing():
+    cluster = ClusterStore(spec(), n_nodes=4, max_workers=1)
+    grid = spec().grid(0)
+    block = np.full(grid.cuboid_shape, 9, np.uint8)
+    for m in (0, 17, 63):
+        cluster.write_cuboid(0, m, block)
+        owner = cluster.router.owner(0, m)
+        assert cluster.has_cuboid(0, m)
+        assert cluster.nodes[owner].has_cuboid(0, m)
+        np.testing.assert_array_equal(cluster.read_cuboid(0, m), block)
+
+
+def test_annotation_project_over_cluster():
+    """Object queries (index-routed reads) agree across shard counts."""
+    image = spec(dtype="uint8")
+    results = {}
+    for n_nodes in (1, 2, 4):
+        proj = AnnotationProject(
+            f"c{n_nodes}", image,
+            store_factory=lambda s: ClusterStore(s, n_nodes=n_nodes))
+        a = proj.meta.create(ann_type="synapse")
+        labels = np.zeros((20, 20, 10), np.uint32)
+        labels[3:9, 4:12, 2:7] = a.ann_id
+        proj.write(0, (10, 30, 11), labels)
+        results[n_nodes] = (proj.bounding_box(a.ann_id, 0),
+                            proj.voxel_list(a.ann_id, 0),
+                            proj.object_cutout(a.ann_id, 0))
+    bbox1, vox1, (lo1, cut1) = results[1]
+    for n in (2, 4):
+        bbox, vox, (lo, cut) = results[n]
+        assert bbox == bbox1
+        np.testing.assert_array_equal(vox, vox1)
+        assert lo == lo1
+        np.testing.assert_array_equal(cut, cut1)
+
+
+# ---------------------------------------------------------- service verbs --
+
+
+@pytest.fixture
+def service():
+    svc = VolumeService()
+    store = ClusterStore(spec(), n_nodes=2)
+    ingest(store, 0, volume())
+    svc.add_dataset("kasthuri11", store)
+    proj = AnnotationProject(
+        "anno", spec(), store_factory=lambda s: ClusterStore(s, n_nodes=2))
+    a = proj.meta.create(ann_type="synapse", confidence=0.99)
+    labels = np.zeros((8, 8, 4), np.uint32)
+    labels[1:7, 2:8, 1:4] = a.ann_id
+    proj.write(0, (16, 16, 8), labels)
+    svc.add_project("anno", proj)
+    svc.ann_id = a.ann_id
+    return svc
+
+
+def test_get_cutout_verb(service):
+    req = {"verb": "GET /cutout", "dataset": "kasthuri11",
+           "lo": (5, 6, 7), "hi": (25, 20, 15)}
+    resp = dispatch(service, req)
+    assert resp["status"] == 200
+    assert resp["shape"] == (20, 14, 8)
+    want = cutout(service.datasets["kasthuri11"], 0, (5, 6, 7), (25, 20, 15))
+    np.testing.assert_array_equal(resp["data"], want)
+    assert resp["cuboids_read"] > 0
+
+
+def test_put_then_get_cutout_verbs(service):
+    data = np.full((6, 6, 6), 123, np.uint8)
+    put = dispatch(service, {"verb": "PUT /cutout", "dataset": "kasthuri11",
+                             "lo": (40, 40, 20), "data": data})
+    assert put["status"] == 200
+    got = dispatch(service, {"verb": "GET /cutout", "dataset": "kasthuri11",
+                             "lo": (40, 40, 20), "hi": (46, 46, 26)})
+    np.testing.assert_array_equal(got["data"], data)
+
+
+def test_cutout_verb_zlib_encoding(service):
+    req = {"verb": "GET /cutout", "dataset": "kasthuri11",
+           "lo": (0, 0, 0), "hi": (16, 16, 8), "encode": "zlib"}
+    resp = dispatch(service, req)
+    assert resp["status"] == 200 and resp["encode"] == "zlib"
+    vol = np.frombuffer(zlib.decompress(resp["data"]),
+                        np.dtype(resp["dtype"])).reshape(resp["shape"])
+    want = cutout(service.datasets["kasthuri11"], 0, (0, 0, 0), (16, 16, 8))
+    np.testing.assert_array_equal(vol, want)
+
+
+def test_annotation_verbs(service):
+    bbox = dispatch(service, {"verb": "GET /objects/boundingbox",
+                              "project": "anno", "id": service.ann_id})
+    assert bbox["status"] == 200
+    assert bbox["lo"] == [16, 16, 8]  # cuboid-resolution bbox
+    obj = dispatch(service, {"verb": "GET /objects/cutout",
+                             "project": "anno", "id": service.ann_id})
+    assert obj["status"] == 200
+    ids = np.unique(obj["data"])
+    assert set(int(i) for i in ids) <= {0, service.ann_id}
+    assert (obj["data"] == service.ann_id).sum() == 6 * 6 * 3
+
+
+def test_error_statuses(service):
+    assert dispatch(service, {"verb": "GET /cutout",
+                              "dataset": "nope"})["status"] == 404
+    assert dispatch(service, {"verb": "GET /objects/boundingbox",
+                              "project": "anno", "id": 999})["status"] == 404
+    assert dispatch(service, {"verb": "DELETE /everything"})["status"] == 405
+    bad = dispatch(service, {"verb": "GET /cutout", "dataset": "kasthuri11",
+                             "lo": (0, 0), "hi": (4, 4, 4)})
+    assert bad["status"] == 400

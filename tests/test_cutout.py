@@ -1,9 +1,9 @@
 """Cutout engine vs numpy-slicing oracle (paper §4.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
-from repro.core.cuboid import CuboidGrid, DatasetSpec
+from repro.core.cuboid import DatasetSpec
 from repro.core.cutout import (CutoutStats, batch_cutout, build_hierarchy,
                                cutout, ingest, project, write_cutout)
 from repro.core.store import CuboidStore, MemoryBackend

@@ -6,9 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.models import (abstract_params, build_model, count_params,
-                          init_params)
-from repro.models.config import SHAPES
+from repro.models import build_model, count_params, init_params
 from repro.models.params import ParamSpec
 
 

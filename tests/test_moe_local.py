@@ -44,8 +44,11 @@ print("OK")
 
 
 def test_local_dispatch_matches_gspmd():
+    # JAX_PLATFORMS=cpu: the script wants 4 *host* devices; without it jax
+    # may probe for an accelerator (e.g. TPU metadata) and hang.
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=300,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout

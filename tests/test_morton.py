@@ -1,7 +1,6 @@
 """Property tests for the Morton curve (paper §3 invariants)."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import morton
 

@@ -1,5 +1,4 @@
 """Roofline extraction unit tests (HLO collective parsing, terms)."""
-import numpy as np
 import pytest
 
 from repro.launch.roofline import (Roofline, collective_bytes,

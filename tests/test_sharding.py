@@ -7,8 +7,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model
 from repro.models.params import ParamSpec, is_spec
-from repro.train.sharding import (default_rules, make_plan, resolve_leaf,
-                                  resolve_specs, batch_pspec)
+from repro.train.sharding import (default_rules, make_plan, resolve_leaf, batch_pspec)
 
 
 class FakeMesh:
@@ -126,7 +125,7 @@ def test_weight_stationary_decode_rules():
     assert p[0] is None and p[1] in ("data", ("data",))
 
 
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 
 @given(data=st.data())

@@ -1,0 +1,90 @@
+"""ObjectIndex edge cases and cluster partitioning of object runs."""
+import numpy as np
+
+from repro.core.cuboid import CuboidGrid
+from repro.core.spatial_index import ObjectIndex
+
+
+def grid():
+    return CuboidGrid(volume_shape=(64, 64, 32), cuboid_shape=(16, 16, 8))
+
+
+def test_empty_object():
+    idx = ObjectIndex()
+    assert idx.cuboids(42) == []
+    assert idx.runs(42) == []
+    assert idx.bounding_box(42, grid()) is None
+    assert idx.partitioned_runs(42, [(0, 32), (32, 64)]) == {}
+    assert 42 not in idx
+
+
+def test_single_cuboid_object():
+    idx = ObjectIndex()
+    idx.append_batch({7: [5]})
+    assert idx.cuboids(7) == [5]
+    assert idx.runs(7) == [(5, 6)]
+    bbox = idx.bounding_box(7, grid())
+    assert bbox is not None
+    lo, hi = bbox
+    g = grid()
+    origin = g.cuboid_origin(5)
+    assert lo == list(origin)
+    assert hi == [o + c for o, c in zip(origin, g.cuboid_shape)]
+
+
+def test_non_contiguous_morton_sets():
+    idx = ObjectIndex()
+    # two contiguous blocks with a hole, plus an isolated cell, appended
+    # out of order and with duplicates across two batches
+    idx.append_batch({1: [9, 3, 4, 5]})
+    idx.append_batch({1: [4, 12, 13]})
+    assert idx.cuboids(1) == [3, 4, 5, 9, 12, 13]       # sorted, deduped
+    assert idx.runs(1) == [(3, 6), (9, 10), (12, 14)]   # collapsed runs
+    assert idx.append_batches == 2
+
+
+def test_bounding_box_clips_to_volume():
+    g = CuboidGrid(volume_shape=(20, 20, 10), cuboid_shape=(16, 16, 8))
+    idx = ObjectIndex()
+    # last cell of the 2x2x2 grid: its cuboid extends past the volume
+    last = g.cuboid_of_voxel((19, 19, 9))
+    idx.append_batch({2: [last]})
+    lo, hi = idx.bounding_box(2, g)
+    assert hi == [20, 20, 10]  # clamped, not 32/32/16
+    assert lo == [16, 16, 8]
+
+
+def test_partitioned_runs_clip_at_segment_boundaries():
+    idx = ObjectIndex()
+    idx.append_batch({5: list(range(6, 22))})    # one run (6, 22)
+    segments = [(0, 8), (8, 16), (16, 32)]
+    parts = idx.partitioned_runs(5, segments)
+    assert parts == {0: [(6, 8)], 1: [(8, 16)], 2: [(16, 22)]}
+    # clipped pieces exactly re-cover the object
+    covered = sorted(m for runs in parts.values()
+                     for a, b in runs for m in range(a, b))
+    assert covered == idx.cuboids(5)
+
+
+def test_remove_and_ids():
+    idx = ObjectIndex()
+    idx.append_batch({1: [0], 3: [1], 2: [2]})
+    assert idx.ids() == [1, 2, 3]
+    idx.remove(3)
+    assert idx.ids() == [1, 2]
+    assert idx.runs(3) == []
+    idx.remove(999)  # removing an absent id is a no-op
+    assert idx.ids() == [1, 2]
+
+
+def test_bounding_box_non_contiguous_spans_hole():
+    g = grid()
+    idx = ObjectIndex()
+    m_a = g.cuboid_of_voxel((0, 0, 0))
+    m_b = g.cuboid_of_voxel((48, 48, 24))
+    idx.append_batch({4: [m_a, m_b]})
+    lo, hi = idx.bounding_box(4, g)
+    assert lo == [0, 0, 0]
+    assert hi == [64, 64, 32]
+    vox = np.prod([h - l for l, h in zip(lo, hi)])
+    assert vox == 64 * 64 * 32

@@ -8,8 +8,7 @@ import pytest
 
 from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
 from repro.data import DataPipeline, PipelineConfig, TokenStore
-from repro.ft import (FailureInjector, StragglerMonitor, TrainingSupervisor,
-                      WorkerFailure)
+from repro.ft import FailureInjector, StragglerMonitor, TrainingSupervisor
 from repro.optim import (AdamWConfig, adamw_update, compress_grads,
                          cosine_schedule, decompress_grads)
 

@@ -1,5 +1,4 @@
 """End-to-end behaviour tests for the full system."""
-import json
 import subprocess
 import sys
 import os

@@ -1,7 +1,6 @@
 """Synapse-detection pipeline tests (paper §2 application)."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core.annotations import AnnotationProject
 from repro.core.cuboid import DatasetSpec
