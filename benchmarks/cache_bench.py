@@ -1,0 +1,190 @@
+"""Cache-tier benchmarks (the paper §6 memcached/SSD vision, measured).
+
+Two stories:
+
+  * ``repeated``: the dominant vision-pipeline access pattern — the same
+    region cut out over and over (model training sweeps, proofreading
+    views).  A disk-backed store is measured cold (cacheless) and warm
+    (hot-cuboid cache): the warm path serves decoded cuboids from memory,
+    skipping file I/O *and* decompression.  The speedup row is the PR's
+    acceptance number (>= 3x), and every cached cutout is verified
+    bit-identical against the cacheless result across 1/2/4 shards.
+  * ``burst``: bursty small writes through the write-behind ingest queue —
+    the submit-side latency the client sees (queue absorbs the burst)
+    vs. the synchronous write path, plus the explicit ``flush()`` barrier
+    cost that makes the burst durable.
+
+``BENCH_PRESET=tiny`` shrinks volumes for the CI smoke job.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import ClusterStore
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest, write_cutout
+from repro.core.store import CuboidStore, DirectoryBackend
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    return (64, 64, 64) if preset() == "tiny" else (256, 256, 256)
+
+
+def _spec(shape):
+    return DatasetSpec(name="cache_bench", volume_shape=shape,
+                       dtype="uint8", base_cuboid=(32, 32, 16))
+
+
+def _boxes(shape, n, seed=21):
+    rng = np.random.default_rng(seed)
+    size = tuple(max(8, s // 2) for s in shape)
+    out = []
+    for _ in range(n):
+        lo = tuple(int(rng.integers(1, s - sz)) for s, sz in zip(shape, size))
+        out.append((lo, tuple(l + sz for l, sz in zip(lo, size))))
+    return out
+
+
+def _timed(fn, boxes, repeats):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for lo, hi in boxes:
+            fn(lo, hi)
+    return (time.perf_counter() - t0) / (repeats * len(boxes))
+
+
+def repeated_cutout() -> List[Dict]:
+    """Warm-cache repeated cutouts vs. the cacheless disk path."""
+    shape = _shape()
+    vol = np.random.default_rng(7).integers(0, 255, size=shape,
+                                            dtype=np.uint8)
+    boxes = _boxes(shape, n=4)
+    repeats = 3
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="ocp-cache-bench-") as root:
+        cold = CuboidStore(_spec(shape), backend=DirectoryBackend(root))
+        ingest(cold, 0, vol)
+        t_cold = _timed(lambda lo, hi: cutout(cold, 0, lo, hi), boxes,
+                        repeats)
+        # warm path: same directory tree, hot-cuboid cache in front
+        warm = CuboidStore(_spec(shape), backend=DirectoryBackend(root))
+        from repro.cluster import attach_cache
+        attach_cache(warm, max(64 << 20, 4 * vol.nbytes))
+        for lo, hi in boxes:  # warm the working set
+            cutout(warm, 0, lo, hi)
+        t_warm = _timed(lambda lo, hi: cutout(warm, 0, lo, hi), boxes,
+                        repeats)
+        # acceptance: cached results bit-identical to the cacheless path
+        identical = all(
+            np.array_equal(cutout(warm, 0, lo, hi), cutout(cold, 0, lo, hi))
+            for lo, hi in boxes)
+        hits = warm.read_stats.cache_hits
+        misses = warm.read_stats.cache_misses
+    mb = float(np.prod([max(8, s // 2) for s in shape])) / 1e6
+    rows.append({"name": f"cache/cold/{shape[0]}",
+                 "us_per_call": t_cold * 1e6,
+                 "derived": f"{mb / t_cold:.1f}MBps"})
+    rows.append({"name": f"cache/warm/{shape[0]}",
+                 "us_per_call": t_warm * 1e6,
+                 "derived": f"{mb / t_warm:.1f}MBps"})
+    rows.append({"name": f"cache/warm_speedup/{shape[0]}",
+                 "us_per_call": 0.0,
+                 "derived": (f"{t_cold / t_warm:.2f}x_vs_cold"
+                             f";identical={identical}"
+                             f";hits={hits};misses={misses}")})
+    return rows
+
+
+def shard_identity() -> List[Dict]:
+    """Cached vs. uncached cutouts bit-identical across 1/2/4 shards."""
+    shape = tuple(min(s, 64) for s in _shape())
+    vol = np.random.default_rng(8).integers(0, 255, size=shape,
+                                            dtype=np.uint8)
+    boxes = _boxes(shape, n=3, seed=22)
+    rows = []
+    for n_nodes in (1, 2, 4):
+        plain = ClusterStore(_spec(shape), n_nodes=n_nodes,
+                             cache_bytes=0, write_behind=False)
+        cached = ClusterStore(_spec(shape), n_nodes=n_nodes,
+                              cache_bytes=64 << 20, write_behind=True)
+        ingest(plain, 0, vol)
+        ingest(cached, 0, vol)
+        identical = all(
+            np.array_equal(cutout(cached, 0, lo, hi),
+                           cutout(plain, 0, lo, hi))
+            for lo, hi in boxes for _ in range(2))  # cold + warm pass
+        rows.append({"name": f"cache/identity/shards{n_nodes}",
+                     "us_per_call": 0.0,
+                     "derived": f"identical={identical}"})
+        plain.close()
+        cached.close()
+    return rows
+
+
+def burst_ingest() -> List[Dict]:
+    """Small-write bursts: write-behind submit latency vs. sync writes."""
+    shape = tuple(min(s, 128) for s in _shape())
+    spec = _spec(shape)
+    patch_shape = (32, 32, 16)
+    n_patches = 16 if preset() == "tiny" else 64
+    rng = np.random.default_rng(9)
+    patches = []
+    for _ in range(n_patches):
+        lo = tuple(int(rng.integers(0, s - p))
+                   for s, p in zip(shape, patch_shape))
+        patches.append((lo, rng.integers(1, 255, size=patch_shape,
+                                         dtype=np.uint8)))
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="ocp-burst-bench-") as root:
+        def disk_factory(i, s):
+            return CuboidStore(
+                s, backend=DirectoryBackend(os.path.join(root, f"sync{i}")))
+
+        sync = ClusterStore(spec, n_nodes=2, node_factory=disk_factory,
+                            cache_bytes=0, write_behind=False)
+        t0 = time.perf_counter()
+        for lo, data in patches:
+            write_cutout(sync, 0, lo, data)
+        t_sync = (time.perf_counter() - t0) / n_patches
+        sync.close()
+
+        def disk_factory2(i, s):
+            return CuboidStore(
+                s, backend=DirectoryBackend(os.path.join(root, f"wb{i}")))
+
+        wb = ClusterStore(spec, n_nodes=2, node_factory=disk_factory2,
+                          cache_bytes=64 << 20, write_behind=True,
+                          write_behind_items=4 * n_patches)
+        t0 = time.perf_counter()
+        for lo, data in patches:
+            write_cutout(wb, 0, lo, data)
+        t_submit = (time.perf_counter() - t0) / n_patches
+        t0 = time.perf_counter()
+        drained = wb.flush()
+        t_flush = time.perf_counter() - t0
+        q = wb.queue_counters()
+        wb.close()
+    rows.append({"name": f"cache/burst_sync/{shape[0]}",
+                 "us_per_call": t_sync * 1e6,
+                 "derived": f"{n_patches}patches"})
+    rows.append({"name": f"cache/burst_submit/{shape[0]}",
+                 "us_per_call": t_submit * 1e6,
+                 "derived": f"{t_sync / t_submit:.2f}x_vs_sync"
+                            f";peak_depth={q['depth_peak']}"})
+    rows.append({"name": f"cache/burst_flush/{shape[0]}",
+                 "us_per_call": t_flush * 1e6,
+                 "derived": f"drained{drained}"})
+    return rows
+
+
+def rows() -> List[Dict]:
+    return repeated_cutout() + shard_identity() + burst_ingest()

@@ -1,6 +1,13 @@
 """Spatially-partitioned data cluster (paper §4.1): sharded stores,
-stateless routing, and the RESTful-style service verbs over them."""
+stateless routing, the hot-cuboid cache tier + write-behind ingest queue
+(paper §6 vision), and the RESTful-style service verbs over them."""
 
+from .cache import (
+    CuboidCache,
+    WriteBehindQueue,
+    attach_cache,
+    enable_write_behind,
+)
 from .handlers import (
     HANDLERS,
     VolumeService,
@@ -9,6 +16,8 @@ from .handlers import (
     get_cutout,
     get_object_cutout,
     get_projection,
+    get_stats,
+    post_flush,
     put_cutout,
 )
 from .router import Router
@@ -17,6 +26,10 @@ from .store import ClusterStore
 __all__ = [
     "ClusterStore",
     "Router",
+    "CuboidCache",
+    "WriteBehindQueue",
+    "attach_cache",
+    "enable_write_behind",
     "VolumeService",
     "HANDLERS",
     "dispatch",
@@ -25,4 +38,6 @@ __all__ = [
     "get_projection",
     "get_annotation_bbox",
     "get_object_cutout",
+    "post_flush",
+    "get_stats",
 ]

@@ -1,0 +1,492 @@
+"""Hot-cuboid caching tier + write-behind ingest queue (paper §6 vision).
+
+The paper's §6 roadmap puts a memcached-style memory tier in front of the
+disk read path and lets SSD nodes absorb bursty small writes.  This module
+reproduces both halves as composable objects a `CuboidStore` (and therefore
+a `ClusterStore` shard) attaches:
+
+* :class:`CuboidCache` — a read-through LRU of *compressed* cuboid blobs
+  (plus lazily-memoized decoded blocks) in front of ``fetch_runs``.  The
+  LRU is keyed for **Morton-curve locality**: keys are grouped into curve
+  segments of ``2**segment_bits`` consecutive cuboids and eviction drops
+  whole segments, never single keys — a cutout that re-touches a region
+  finds the entire neighbourhood resident or absent together.  A byte
+  budget bounds resident blob + block bytes.  Absence is cached too
+  (``blob is None`` entries), so a fully warm cutout performs zero backend
+  I/O even over lazily-allocated volumes.
+
+* :class:`WriteBehindQueue` — a bounded per-node queue that absorbs cuboid
+  writes and applies them to the backing store from a background flusher
+  thread in batches (the SSD write path absorbing bursts while reads
+  proceed uninterfered).  ``peek``/``peek_many`` give readers the pending
+  (freshest) value, so the store keeps **read-your-writes** without
+  waiting for the flush.  ``flush()`` is the durability barrier: when it
+  returns, every previously enqueued write has been applied to the
+  backend.  ``close()`` flushes and stops the flusher.
+
+Consistency contract (what `cluster/handlers.py` exposes):
+
+1. A write is *readable* through the owning store the moment the write
+   call returns (cache absorbs it, the queue holds it pending).
+2. A write is *durable in the backend* only after ``flush()`` — the
+   ``POST /flush`` verb, ``migrate()``, ``stored_keys()``, and ``close()``
+   all force this barrier.
+3. Eviction is invisible: an evicted segment re-reads from pending writes
+   first, then the backends, bit-identically.
+
+`attach_cache` / `enable_write_behind` wire either tier onto an existing
+`CuboidStore`; `ClusterStore(cache_bytes=..., write_behind=True)` wires
+every node shard (also switchable via the ``REPRO_CACHE_BYTES`` /
+``REPRO_WRITE_BEHIND`` environment knobs, which the CI cache matrix leg
+uses to run tier-1 with the tier enabled).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.store import Key, decompress
+
+# Accounting overhead charged per cache entry (key tuple, links, and the
+# negative entries whose blob is None but which still occupy the table).
+ENTRY_OVERHEAD = 64
+
+SegKey = Tuple[int, int, int]  # (resolution, channel, morton >> segment_bits)
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached cuboid: compressed blob (None = cached absence) and an
+    optionally memoized decoded block (read-only ndarray)."""
+
+    blob: Optional[bytes]
+    block: Optional[np.ndarray] = None
+
+    @property
+    def nbytes(self) -> int:
+        n = ENTRY_OVERHEAD
+        if self.blob is not None:
+            n += len(self.blob)
+        if self.block is not None:
+            n += self.block.nbytes
+        return n
+
+
+class _Segment:
+    """One curve segment's entries (the eviction unit)."""
+
+    __slots__ = ("entries", "nbytes")
+
+    def __init__(self):
+        self.entries: Dict[Key, _Entry] = {}
+        self.nbytes = 0
+
+
+class CuboidCache:
+    """Segment-LRU read-through cache of compressed cuboid blobs.
+
+    ``segment_bits`` sets the locality granule: morton indexes ``m`` with
+    equal ``m >> segment_bits`` (same resolution/channel) live and die
+    together.  ``max_bytes`` bounds total resident bytes; when exceeded,
+    least-recently-*touched* segments are dropped wholesale until the
+    budget holds (the most recent segment always survives, even if it
+    alone exceeds the budget — it is the working set).
+
+    Thread-safe; all counters are monotonic except ``bytes``.
+    """
+
+    def __init__(self, max_bytes: int = 64 << 20, segment_bits: int = 3):
+        if max_bytes <= 0:
+            raise ValueError("max_bytes must be positive")
+        if segment_bits < 0:
+            raise ValueError("segment_bits must be >= 0")
+        self.max_bytes = int(max_bytes)
+        self.segment_bits = int(segment_bits)
+        self._segments: "collections.OrderedDict[SegKey, _Segment]" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0  # segments dropped
+        self.insertions = 0
+
+    # -- internals ---------------------------------------------------------
+    def _seg_key(self, key: Key) -> SegKey:
+        r, c, m = key
+        return (r, c, m >> self.segment_bits)
+
+    def _touch(self, sk: SegKey) -> Optional[_Segment]:
+        seg = self._segments.get(sk)
+        if seg is not None:
+            self._segments.move_to_end(sk)
+        return seg
+
+    def _evict_to_budget(self) -> None:
+        # Evict whole LRU segments; keep at least the most recent one.
+        while self.bytes > self.max_bytes and len(self._segments) > 1:
+            _, seg = self._segments.popitem(last=False)
+            self.bytes -= seg.nbytes
+            self.evictions += 1
+
+    def _store(self, key: Key, entry: _Entry) -> None:
+        sk = self._seg_key(key)
+        seg = self._segments.get(sk)
+        if seg is None:
+            seg = self._segments[sk] = _Segment()
+        else:
+            self._segments.move_to_end(sk)
+        old = seg.entries.get(key)
+        if old is not None:
+            seg.nbytes -= old.nbytes
+            self.bytes -= old.nbytes
+        seg.entries[key] = entry
+        seg.nbytes += entry.nbytes
+        self.bytes += entry.nbytes
+        self.insertions += 1
+        self._evict_to_budget()
+
+    # -- lookups -----------------------------------------------------------
+    def get_blob(self, key: Key) -> Tuple[bool, Optional[bytes]]:
+        """Return ``(hit, blob)``.  ``hit`` and ``blob is None`` together
+        mean *cached absence* (the cuboid is a lazy zero)."""
+        with self._lock:
+            seg = self._touch(self._seg_key(key))
+            entry = seg.entries.get(key) if seg is not None else None
+            if entry is None:
+                self.misses += 1
+                return False, None
+            self.hits += 1
+            return True, entry.blob
+
+    def probe(self, key: Key) -> Tuple[bool, Optional[bytes]]:
+        """`get_blob` without touching the hit/miss counters or the LRU —
+        for presence checks (``has_cuboid``) that are not reads."""
+        with self._lock:
+            seg = self._segments.get(self._seg_key(key))
+            entry = seg.entries.get(key) if seg is not None else None
+            if entry is None:
+                return False, None
+            return True, entry.blob
+
+    def get_block(self, key: Key, shape, dtype) -> Tuple[bool, Optional[np.ndarray]]:
+        """Blob lookup that also memoizes the decoded block on first use.
+
+        Returned arrays are read-only views owned by the cache — callers
+        copy before mutating (the cutout engine only assembles from them).
+        """
+        with self._lock:
+            seg = self._touch(self._seg_key(key))
+            entry = seg.entries.get(key) if seg is not None else None
+            if entry is None:
+                self.misses += 1
+                return False, None
+            self.hits += 1
+            blob, block = entry.blob, entry.block
+        if blob is None or block is not None:
+            return True, block
+        # decompress OUTSIDE the lock (a first-touch decode must not
+        # serialize every other cache operation), then memoize — only if
+        # the entry still holds the same blob (a racing write or eviction
+        # drops the memo; a racing decode of the same blob is benign).
+        block = decompress(blob, shape, dtype)
+        block.flags.writeable = False
+        with self._lock:
+            sk = self._seg_key(key)
+            seg = self._segments.get(sk)
+            entry = seg.entries.get(key) if seg is not None else None
+            if entry is not None and entry.blob is blob and entry.block is None:
+                entry.block = block
+                seg.nbytes += block.nbytes
+                self.bytes += block.nbytes
+                self._evict_to_budget()
+        return True, block
+
+    # -- population / coherence -------------------------------------------
+    def put(self, key: Key, blob: Optional[bytes]) -> None:
+        """Absorb a freshly read or written blob (None = known absent)."""
+        with self._lock:
+            self._store(key, _Entry(blob=blob))
+
+    def put_many(self, items: Sequence[Tuple[Key, Optional[bytes]]]) -> None:
+        with self._lock:
+            for key, blob in items:
+                self._store(key, _Entry(blob=blob))
+
+    def put_block(self, key: Key, blob: bytes, block: np.ndarray) -> None:
+        """Absorb a blob together with its decoded block."""
+        if not block.flags.c_contiguous or block.flags.writeable:
+            block = np.ascontiguousarray(block).copy()
+        block.flags.writeable = False
+        with self._lock:
+            self._store(key, _Entry(blob=blob, block=block))
+
+    def invalidate(self, key: Key) -> None:
+        with self._lock:
+            sk = self._seg_key(key)
+            seg = self._segments.get(sk)
+            entry = seg.entries.pop(key, None) if seg is not None else None
+            if entry is not None:
+                seg.nbytes -= entry.nbytes
+                self.bytes -= entry.nbytes
+                if not seg.entries:
+                    del self._segments[sk]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._segments.clear()
+            self.bytes = 0
+
+    # -- introspection -----------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(s.entries) for s in self._segments.values())
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
+    def counters(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "insertions": self.insertions,
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
+            "segments": len(self._segments),
+        }
+
+
+class WriteBehindQueue:
+    """Bounded write-behind queue with a background batch flusher.
+
+    ``put_many(items)`` / ``delete(key)`` are the apply callbacks (bound to
+    the owning store's backends); both run under ``apply_lock`` so flushes
+    serialize with per-key ``migrate()`` and direct writes.  Enqueued
+    values overwrite older pending values for the same key (last write
+    wins, exactly as the backend would resolve them); ``blob=None`` means
+    *delete* (lazy-zero write).
+
+    Backpressure: ``enqueue`` blocks while ``max_items`` distinct keys are
+    pending (bursts are absorbed up to the bound, then writers throttle to
+    the flusher's pace — the paper's SSD saturating behaviour).
+
+    A flusher exception parks the queue in an error state: the pending map
+    is preserved and the error re-raises from ``flush()``/``close()``/
+    ``enqueue`` so lost writes are loud, never silent.
+    """
+
+    def __init__(
+        self,
+        put_many: Callable[[Sequence[Tuple[Key, bytes]]], None],
+        delete: Callable[[Key], None],
+        apply_lock: Optional[threading.Lock] = None,
+        max_items: int = 512,
+        batch_items: int = 64,
+    ):
+        if max_items <= 0 or batch_items <= 0:
+            raise ValueError("max_items and batch_items must be positive")
+        self._put_many = put_many
+        self._delete = delete
+        self._apply_lock = apply_lock or threading.Lock()
+        self.max_items = int(max_items)
+        self.batch_items = int(batch_items)
+        self._mu = threading.Condition()
+        self._pending: Dict[Key, Tuple[int, Optional[bytes]]] = {}
+        self._order: Deque[Key] = collections.deque()
+        self._seq = 0
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        self.enqueued = 0
+        self.applied = 0
+        self.batches = 0
+        self.depth_peak = 0
+        self._thread = threading.Thread(target=self._run, name="ocp-write-behind", daemon=True)
+        self._thread.start()
+
+    # -- producer side -----------------------------------------------------
+    def _check_error_locked(self) -> None:
+        if self._error is not None:
+            raise RuntimeError("write-behind flusher failed") from self._error
+
+    def enqueue(self, key: Key, blob: Optional[bytes]) -> None:
+        with self._mu:
+            self._check_error_locked()
+            if self._closed:
+                raise RuntimeError("write-behind queue is closed")
+            # Backpressure on *distinct* keys: rewriting a pending key never
+            # blocks (it replaces in place).
+            while len(self._pending) >= self.max_items and key not in self._pending:
+                self._check_error_locked()
+                self._mu.notify_all()
+                self._mu.wait(0.05)
+                if self._closed:  # closed while we waited for room
+                    raise RuntimeError("write-behind queue is closed")
+            self._seq += 1
+            self._pending[key] = (self._seq, blob)
+            self._order.append(key)
+            self.enqueued += 1
+            self.depth_peak = max(self.depth_peak, len(self._pending))
+            self._mu.notify_all()
+
+    def enqueue_many(self, items: Sequence[Tuple[Key, Optional[bytes]]]) -> None:
+        for key, blob in items:
+            self.enqueue(key, blob)
+
+    # -- reader side (read-your-writes) ------------------------------------
+    def peek(self, key: Key) -> Tuple[bool, Optional[bytes]]:
+        """Freshest pending value: ``(True, blob_or_None_for_delete)``."""
+        with self._mu:
+            ent = self._pending.get(key)
+            if ent is None:
+                return False, None
+            return True, ent[1]
+
+    def peek_many(self, keys: Sequence[Key]) -> List[Tuple[bool, Optional[bytes]]]:
+        with self._mu:
+            out = []
+            for key in keys:
+                ent = self._pending.get(key)
+                out.append((False, None) if ent is None else (True, ent[1]))
+            return out
+
+    @property
+    def depth(self) -> int:
+        return len(self._pending)
+
+    # -- flusher -----------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._mu:
+                while not self._order and not self._closed:
+                    self._mu.wait(0.1)
+                if not self._order and self._closed:
+                    return
+                batch: List[Tuple[Key, int, Optional[bytes]]] = []
+                seen = set()
+                while self._order and len(batch) < self.batch_items:
+                    key = self._order.popleft()
+                    if key in seen:
+                        continue
+                    ent = self._pending.get(key)
+                    if ent is None:  # a later pop already applied it
+                        continue
+                    seen.add(key)
+                    batch.append((key, ent[0], ent[1]))
+            if not batch:
+                continue
+            try:
+                with self._apply_lock:
+                    puts = [(k, b) for k, _, b in batch if b is not None]
+                    if puts:
+                        self._put_many(puts)
+                    for k, _, b in batch:
+                        if b is None:
+                            self._delete(k)
+            except BaseException as e:  # park: preserve pending, re-raise later
+                with self._mu:
+                    self._error = e
+                    self._mu.notify_all()
+                return
+            with self._mu:
+                for key, seq, _ in batch:
+                    ent = self._pending.get(key)
+                    if ent is not None and ent[0] == seq:
+                        del self._pending[key]
+                self.applied += len(batch)
+                self.batches += 1
+                self._mu.notify_all()
+
+    # -- barriers ----------------------------------------------------------
+    def flush(self, timeout: Optional[float] = None) -> int:
+        """Block until every write enqueued *before this call* is applied
+        (or superseded by a newer write to the same key).
+
+        The barrier is a sequence snapshot, not queue emptiness, so it
+        stays live under sustained concurrent writers: writes enqueued
+        after the flush began do not extend the wait.  Returns the number
+        of writes that were pending at call time.
+        """
+        with self._mu:
+            target = self._seq
+            drained = sum(1 for seq, _ in self._pending.values() if seq <= target)
+            self._mu.notify_all()
+            waited = 0.0
+            while any(seq <= target for seq, _ in self._pending.values()):
+                self._check_error_locked()
+                if not self._thread.is_alive() and self._error is None:
+                    raise RuntimeError("write-behind flusher died")
+                self._mu.wait(0.05)
+                waited += 0.05
+                if timeout is not None and waited >= timeout:
+                    raise TimeoutError(f"flush timed out with {len(self._pending)} pending")
+            self._check_error_locked()
+        return drained
+
+    def close(self) -> None:
+        """Flush, then stop the flusher thread.  Idempotent."""
+        with self._mu:
+            if self._closed and not self._thread.is_alive():
+                self._check_error_locked()
+                return
+            self._closed = True
+            self._mu.notify_all()
+        self._thread.join(timeout=30.0)
+        with self._mu:
+            self._check_error_locked()
+            if self._pending:
+                raise RuntimeError(f"write-behind queue closed with {len(self._pending)} pending")
+
+    def counters(self) -> Dict[str, int]:
+        return {
+            "enqueued": self.enqueued,
+            "applied": self.applied,
+            "batches": self.batches,
+            "depth": len(self._pending),
+            "depth_peak": self.depth_peak,
+        }
+
+
+# -- store wiring ----------------------------------------------------------
+
+
+def attach_cache(store, cache_or_bytes) -> CuboidCache:
+    """Attach a :class:`CuboidCache` to a `CuboidStore` (read-through +
+    write-absorb from then on).  Accepts a cache instance or a byte budget."""
+    cache = (
+        cache_or_bytes
+        if isinstance(cache_or_bytes, CuboidCache)
+        else CuboidCache(max_bytes=int(cache_or_bytes))
+    )
+    store.cache = cache
+    return cache
+
+
+def enable_write_behind(store, max_items: int = 512, batch_items: int = 64) -> WriteBehindQueue:
+    """Attach a :class:`WriteBehindQueue` to a `CuboidStore`.
+
+    Puts land on the store's write path (the SSD-node analogue when a
+    write backend is attached); deletes clear *both* paths so a lazy-zero
+    write can never resurrect stale read-path data after the flush.
+    Applies run under the store lock, serializing with ``migrate()``.
+    """
+    target = store.write_backend or store.read_backend
+
+    def _delete(key: Key) -> None:
+        target.delete(key)
+        store.read_backend.delete(key)
+
+    queue = WriteBehindQueue(
+        put_many=target.put_many,
+        delete=_delete,
+        apply_lock=store._lock,
+        max_items=max_items,
+        batch_items=batch_items,
+    )
+    store.write_behind = queue
+    return queue

@@ -12,10 +12,22 @@ Requests name a dataset or annotation project by key; volumes travel as
 numpy arrays by default or zlib blobs with ``{"encode": "zlib"}`` (the
 paper returns compressed volumes on the wire).  Responses always carry an
 integer ``status`` using HTTP conventions.
+
+Consistency contract (the cache tier + write-behind queue, paper §6):
+
+* ``PUT /cutout`` returning 200 guarantees **read-your-writes**: every
+  subsequent ``GET /cutout`` through the service sees the write, even
+  while it is still pending in a node's write-behind queue.  Pass
+  ``{"sync": true}`` to additionally force durability before the response.
+* ``POST /flush`` is the explicit **durability barrier**: when it returns,
+  every previously accepted write has been applied to the node backends.
+* ``GET /stats`` exposes the path/cache/queue counters (hits, misses,
+  queue depth) a deployment monitors to size the tiers.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import zlib
 from typing import Any, Callable, Dict, Optional
 
@@ -116,7 +128,10 @@ def put_cutout(service: VolumeService, request: Request) -> Response:
         )
     except _BAD_REQUEST as e:
         return _error(400, f"bad write request: {e}")
-    return {"status": 200, "written_shape": tuple(data.shape)}
+    body: Response = {"status": 200, "written_shape": tuple(data.shape)}
+    if request.get("sync") and hasattr(store, "flush"):
+        body["flushed"] = store.flush()  # durability barrier before reply
+    return body
 
 
 def get_projection(service: VolumeService, request: Request) -> Response:
@@ -178,12 +193,53 @@ def get_object_cutout(service: VolumeService, request: Request) -> Response:
     return body
 
 
+def post_flush(service: VolumeService, request: Request) -> Response:
+    """``POST /flush`` — durability barrier for the write-behind tier.
+
+    Drains the named dataset's pending writes (or every dataset's when no
+    ``dataset`` key is given) into the node backends before responding.
+    Stores without a write-behind queue flush trivially (0 drained).
+    """
+    name = request.get("dataset")
+    if name is not None and name not in service.datasets:
+        return _error(404, f"unknown dataset {name!r}")
+    targets = [name] if name is not None else list(service.datasets)
+    flushed = {}
+    for n in targets:
+        store = service.datasets[n]
+        flushed[n] = int(store.flush()) if hasattr(store, "flush") else 0
+    return {"status": 200, "flushed": flushed, "total": sum(flushed.values())}
+
+
+def get_stats(service: VolumeService, request: Request) -> Response:
+    """``GET /stats`` — path/cache/queue counters for one dataset.
+
+    Returns the read/write `PathStats` (including cache hit/miss and
+    queue-depth gauges) plus, for cluster stores, the aggregate cache and
+    write-behind queue counters.
+    """
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    body: Response = {
+        "status": 200,
+        "read": dataclasses.asdict(store.read_stats),
+        "write": dataclasses.asdict(store.write_stats),
+    }
+    if hasattr(store, "cache_counters"):
+        body["cache"] = store.cache_counters()
+        body["queue"] = store.queue_counters()
+    return body
+
+
 HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
     "GET /cutout": get_cutout,
     "PUT /cutout": put_cutout,
     "GET /projection": get_projection,
     "GET /objects/boundingbox": get_annotation_bbox,
     "GET /objects/cutout": get_object_cutout,
+    "POST /flush": post_flush,
+    "GET /stats": get_stats,
 }
 
 

@@ -14,13 +14,16 @@ applied *inside* one request).
 from __future__ import annotations
 
 import concurrent.futures as cf
+import dataclasses
 import functools
+import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.cuboid import DatasetSpec
 from ..core.store import CuboidStore, Key, MemoryBackend, PathStats
+from .cache import attach_cache, enable_write_behind
 from .router import Router
 
 NodeFactory = Callable[[int, DatasetSpec], CuboidStore]
@@ -34,12 +37,8 @@ def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
 def _sum_stats(parts: Sequence[PathStats]) -> PathStats:
     out = PathStats()
     for p in parts:
-        out.reads += p.reads
-        out.read_bytes += p.read_bytes
-        out.writes += p.writes
-        out.write_bytes += p.write_bytes
-        out.seeks += p.seeks
-        out.time_s += p.time_s
+        for f in dataclasses.fields(PathStats):
+            setattr(out, f.name, getattr(out, f.name) + getattr(p, f.name))
     return out
 
 
@@ -50,6 +49,14 @@ class ClusterStore:
     directory backends, distinct write paths, etc.  ``max_workers`` bounds
     per-request node parallelism (default: one worker per node; ``0``/``1``
     forces serial fan-out, useful for deterministic profiling).
+
+    ``cache_bytes`` attaches a hot-cuboid cache to every node (the budget
+    is split evenly across shards); ``write_behind`` attaches a per-node
+    write-behind ingest queue (``flush()`` is the durability barrier, see
+    ``repro.cluster.cache``).  Both default to the ``REPRO_CACHE_BYTES`` /
+    ``REPRO_WRITE_BEHIND`` environment knobs (the CI cache matrix leg runs
+    tier-1 with them set), and neither overrides a tier the node factory
+    already attached.
     """
 
     def __init__(
@@ -58,11 +65,27 @@ class ClusterStore:
         n_nodes: int = 2,
         node_factory: Optional[NodeFactory] = None,
         max_workers: Optional[int] = None,
+        cache_bytes: Optional[int] = None,
+        write_behind: Optional[bool] = None,
+        write_behind_items: int = 512,
     ):
         self.spec = spec
         self.router = Router(spec, n_nodes)
         factory = node_factory or _default_node_factory
         self.nodes: List[CuboidStore] = [factory(i, spec) for i in range(n_nodes)]
+        if cache_bytes is None:
+            cache_bytes = int(os.environ.get("REPRO_CACHE_BYTES", "0") or 0) or None
+        if write_behind is None:
+            write_behind = os.environ.get("REPRO_WRITE_BEHIND", "0") not in ("", "0")
+        if cache_bytes:
+            per_node = max(1, int(cache_bytes) // n_nodes)
+            for node in self.nodes:
+                if node.cache is None:
+                    attach_cache(node, per_node)
+        if write_behind:
+            for node in self.nodes:
+                if node.write_behind is None:
+                    enable_write_behind(node, max_items=write_behind_items)
         workers = n_nodes if max_workers is None else max_workers
         if workers > 1:
             self._pool = cf.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="ocp-node")
@@ -74,7 +97,22 @@ class ClusterStore:
     def n_nodes(self) -> int:
         return len(self.nodes)
 
+    @property
+    def has_cache(self) -> bool:
+        return any(node.cache is not None for node in self.nodes)
+
+    def flush(self) -> int:
+        """Durability barrier: drain every node's write-behind queue.
+
+        Returns the total number of pending writes applied.  When it
+        returns, everything previously written through the cluster is in
+        the node backends (the contract ``POST /flush`` exposes)."""
+        jobs = {i: self.nodes[i].flush for i in range(self.n_nodes)}
+        return sum(self._fan_out(jobs).values())
+
     def close(self) -> None:
+        for node in self.nodes:
+            node.close()  # flushes + stops per-node write-behind flushers
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
@@ -127,6 +165,23 @@ class ClusterStore:
             merged.update(part)
         return merged
 
+    def fetch_blocks(
+        self,
+        r: int,
+        runs: Sequence[Tuple[int, int]],
+        channel: int = 0,
+    ) -> Dict[int, Optional[np.ndarray]]:
+        """Decoded-cuboid batch fetch (cache fast path), fanned out per node."""
+        by_node = self.router.split_runs(r, list(runs))
+        jobs = {
+            node: functools.partial(self.nodes[node].fetch_blocks, r, node_runs, channel)
+            for node, node_runs in by_node.items()
+        }
+        merged: Dict[int, Optional[np.ndarray]] = {}
+        for part in self._fan_out(jobs).values():
+            merged.update(part)
+        return merged
+
     def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray], channel: int = 0) -> None:
         """Batch write: group blocks by owner, write nodes in parallel."""
         by_node: Dict[int, Dict[int, np.ndarray]] = {}
@@ -165,3 +220,23 @@ class ClusterStore:
     @property
     def write_stats(self) -> PathStats:
         return _sum_stats([n.write_stats for n in self.nodes])
+
+    def cache_counters(self) -> Dict[str, int]:
+        """Aggregate hot-cuboid cache counters across node shards."""
+        total: Dict[str, int] = {}
+        for node in self.nodes:
+            if node.cache is None:
+                continue
+            for k, v in node.cache.counters().items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+    def queue_counters(self) -> Dict[str, int]:
+        """Aggregate write-behind queue counters across node shards."""
+        total: Dict[str, int] = {}
+        for node in self.nodes:
+            if node.write_behind is None:
+                continue
+            for k, v in node.write_behind.counters().items():
+                total[k] = total.get(k, 0) + v
+        return total

@@ -113,15 +113,25 @@ def cutout(store: CuboidStore, r: int, lo: Sequence[int], hi: Sequence[int],
     if any(l >= h for l, h in zip(lo, hi)):
         return np.zeros([max(0, h - l) for l, h in zip(lo, hi)], dtype=dtype)
     plan = plan_cutout(grid, r, lo, hi, max_runs=max_runs)
-    blobs = store.fetch_runs(r, plan.runs, channel)
     buf = np.zeros(plan.buf_shape, dtype=dtype)
     cshape = grid.cuboid_shape
-    for m, sl, keep in zip(plan.cells, plan.buf_slices, plan.keep_shapes):
-        blob = blobs.get(int(m))
-        if blob is None:
-            continue  # lazy cuboid: buffer is already zeros
-        block = decompress(blob, cshape, dtype)
-        buf[sl] = block[tuple(slice(0, s) for s in keep)]
+    if getattr(store, "has_cache", False):
+        # hot-cuboid tier: decoded blocks come straight from the cache,
+        # skipping backend I/O and decompression for warm regions
+        blocks = store.fetch_blocks(r, plan.runs, channel)
+        for m, sl, keep in zip(plan.cells, plan.buf_slices, plan.keep_shapes):
+            block = blocks.get(int(m))
+            if block is None:
+                continue  # lazy cuboid: buffer is already zeros
+            buf[sl] = block[tuple(slice(0, s) for s in keep)]
+    else:
+        blobs = store.fetch_runs(r, plan.runs, channel)
+        for m, sl, keep in zip(plan.cells, plan.buf_slices, plan.keep_shapes):
+            blob = blobs.get(int(m))
+            if blob is None:
+                continue  # lazy cuboid: buffer is already zeros
+            block = decompress(blob, cshape, dtype)
+            buf[sl] = block[tuple(slice(0, s) for s in keep)]
     out = buf[plan.trim]
     if stats is not None:
         stats.cuboids_read += len(plan.cells)

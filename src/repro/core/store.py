@@ -30,12 +30,28 @@ Key = Tuple[int, int, int]  # (resolution, channel, morton index)
 
 @dataclasses.dataclass
 class PathStats:
+    """Per-path I/O counters.
+
+    ``reads`` counts every cuboid lookup served by the path; with a cache
+    attached every lookup also increments exactly one of ``cache_hits`` /
+    ``cache_misses`` (on the read path), so for a cache-enabled store
+    ``read_stats.reads + write_stats.reads ==
+    read_stats.cache_hits + read_stats.cache_misses`` — the coherence
+    invariant the stress suite asserts.  ``queue_depth`` / ``queue_peak``
+    mirror the write-behind queue occupancy (gauges, updated on enqueue
+    and flush).
+    """
+
     reads: int = 0
     read_bytes: int = 0
     writes: int = 0
     write_bytes: int = 0
     seeks: int = 0          # discontiguous accesses (run boundaries)
     time_s: float = 0.0
+    cache_hits: int = 0     # lookups served by the hot-cuboid cache
+    cache_misses: int = 0   # lookups that had to go below the cache
+    queue_depth: int = 0    # write-behind pending writes (gauge)
+    queue_peak: int = 0     # max pending writes observed (gauge)
 
     def snapshot(self) -> "PathStats":
         return dataclasses.replace(self)
@@ -139,15 +155,27 @@ class DirectoryBackend(Backend):
             pass
 
     def keys(self):
+        # Tolerate foreign entries anywhere in the tree (editor droppings,
+        # .tmp files from interrupted puts, stray data dirs): only
+        # <digits>/<digits>/<hex>.bin regular files are cuboids.
         for r in os.listdir(self.root):
             rd = os.path.join(self.root, r)
-            if not os.path.isdir(rd):
+            if not r.isdigit() or not os.path.isdir(rd):
                 continue
             for c in os.listdir(rd):
                 cd = os.path.join(rd, c)
+                if not c.isdigit() or not os.path.isdir(cd):
+                    continue
                 for fn in os.listdir(cd):
-                    if fn.endswith(".bin"):
-                        yield (int(r), int(c), int(fn[:-4], 16))
+                    if not fn.endswith(".bin"):
+                        continue
+                    try:
+                        m = int(fn[:-4], 16)
+                    except ValueError:
+                        continue
+                    if not os.path.isfile(os.path.join(cd, fn)):
+                        continue
+                    yield (int(r), int(c), m)
 
     def __contains__(self, key):
         return os.path.exists(self._path(key))
@@ -169,12 +197,26 @@ class CuboidStore:
     reads consult it first (freshest), then the read path. ``migrate()``
     flushes write-path contents into the read path — the paper's
     dump-and-restore migration performed when a project cools down.
+
+    Two optional memory tiers sit in front of the paths (paper §6 vision,
+    see ``repro.cluster.cache``):
+
+    * ``cache`` — a `CuboidCache` fronting the *merged* read view.  Every
+      lookup is a hit or a miss; writes absorb into it, so it is never
+      stale (read-your-writes).  Attach via the constructor or
+      ``repro.cluster.cache.attach_cache``.
+    * ``write_behind`` — a `WriteBehindQueue` absorbing writes and
+      applying them to the backends from a background flusher.  Reads
+      consult its pending map below the cache, so data is readable the
+      moment a write returns; ``flush()`` is the durability barrier.
+      Attach via ``repro.cluster.cache.enable_write_behind``.
     """
 
     def __init__(self, spec: DatasetSpec,
                  backend: Optional[Backend] = None,
                  write_path_backend: Optional[Backend] = None,
-                 compression_level: int = 1):
+                 compression_level: int = 1,
+                 cache=None):
         self.spec = spec
         self.read_backend = backend or MemoryBackend()
         self.write_backend = write_path_backend
@@ -183,6 +225,42 @@ class CuboidStore:
         self.write_stats = PathStats()
         self._np_dtype = np.dtype(spec.dtype)
         self._lock = threading.Lock()
+        self.cache = cache                # duck-typed CuboidCache | None
+        self.write_behind = None          # duck-typed WriteBehindQueue | None
+        # Serializes same-key write *order* across tiers (queue/backends vs
+        # cache) and guards read-absorption against concurrent writes.
+        self._order_lock = threading.Lock()
+        self._write_gen = 0
+        # Counter updates are batched per call and applied under this lock
+        # so the reads == cache_hits + cache_misses invariant survives
+        # concurrent clients (bare += would lose updates).
+        self._stats_lock = threading.Lock()
+
+    @property
+    def has_cache(self) -> bool:
+        return self.cache is not None
+
+    def flush(self) -> int:
+        """Durability barrier: block until pending write-behind writes are
+        applied to the backends.  Returns the number drained (0 if no
+        queue is attached)."""
+        if self.write_behind is None:
+            return 0
+        n = self.write_behind.flush()
+        self.write_stats.queue_depth = self.write_behind.depth
+        return n
+
+    def close(self) -> None:
+        """Flush and detach the write-behind queue (stops its flusher)."""
+        if self.write_behind is not None:
+            self.write_behind.close()  # flushes; pending stays readable until drained
+            self.write_behind = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # -- helpers ----------------------------------------------------------
     def _cuboid_shape(self, r: int) -> Tuple[int, ...]:
@@ -191,24 +269,125 @@ class CuboidStore:
     def _zeros(self, r: int) -> np.ndarray:
         return np.zeros(self._cuboid_shape(r), dtype=self._np_dtype)
 
+    # -- the merged view below the cache -----------------------------------
+    def _fetch_misses(self, keys: Sequence[Key]) -> List[Optional[bytes]]:
+        """Resolve keys below the cache: pending write-behind values first
+        (freshest), then the write path, then the read path.  Maintains the
+        per-path read counters (pending hits count on the read path)."""
+        blobs: List[Optional[bytes]] = [None] * len(keys)
+        resolved = [False] * len(keys)
+        pending_hits = 0
+        if self.write_behind is not None:
+            for i, (found, blob) in enumerate(
+                    self.write_behind.peek_many(keys)):
+                if found:
+                    blobs[i] = blob
+                    resolved[i] = True
+                    pending_hits += 1
+        idx = [i for i in range(len(keys)) if not resolved[i]]
+        wp_reads = wp_bytes = rp_reads = rp_bytes = 0
+        if idx:
+            sub = [keys[i] for i in idx]
+            fetched: List[Optional[bytes]] = [None] * len(sub)
+            if self.write_backend is not None:
+                fetched = list(self.write_backend.get_many(sub))
+                hits = [b for b in fetched if b is not None]
+                wp_reads = len(hits)
+                wp_bytes = sum(len(b) for b in hits)
+            still = [j for j, b in enumerate(fetched) if b is None]
+            if still:
+                got = self.read_backend.get_many([sub[j] for j in still])
+                for j, blob in zip(still, got):
+                    fetched[j] = blob
+                rp_reads = len(still)
+                rp_bytes = sum(len(b) for b in got if b is not None)
+            for i, blob in zip(idx, fetched):
+                blobs[i] = blob
+        with self._stats_lock:
+            self.read_stats.reads += pending_hits + rp_reads
+            self.read_stats.read_bytes += rp_bytes
+            self.write_stats.reads += wp_reads
+            self.write_stats.read_bytes += wp_bytes
+        return blobs
+
+    def _read_gen(self) -> int:
+        """Snapshot the write generation for a read-absorb guard.
+
+        Taken under ``_order_lock`` so the snapshot can never land in the
+        middle of a writer's critical section: a fetch that starts after
+        this either sees the landed write or a generation bump.
+        """
+        with self._order_lock:
+            return self._write_gen
+
+    def _absorb_reads(self, items, gen0: int, blocks=None) -> None:
+        """Populate the cache with read results — only if no write raced
+        the fetch (``_write_gen`` unchanged since the ``_read_gen``
+        snapshot), so a stale blob can never overwrite a fresher absorbed
+        write."""
+        if self.cache is None:
+            return
+        with self._order_lock:
+            if self._write_gen != gen0:
+                return
+            for i, (key, blob) in enumerate(items):
+                block = blocks[i] if blocks is not None else None
+                if blob is not None and block is not None:
+                    self.cache.put_block(key, blob, block)
+                else:
+                    self.cache.put(key, blob)
+
+    def _apply_writes(self, items: Sequence[Tuple[Key, Optional[bytes]]]) -> None:
+        """Land compressed writes (``None`` = lazy-zero delete) on every
+        tier, in a single serialized order: write-behind queue (or the
+        backends directly, under the store lock so ``migrate()`` is
+        per-key atomic against us), then the cache — so after this call
+        returns the write is readable (read-your-writes)."""
+        with self._order_lock:
+            self._write_gen += 1
+            if self.write_behind is not None:
+                self.write_behind.enqueue_many(items)
+                self.write_stats.queue_depth = self.write_behind.depth
+                self.write_stats.queue_peak = self.write_behind.depth_peak
+            else:
+                target = self.write_backend or self.read_backend
+                puts = [(k, b) for k, b in items if b is not None]
+                with self._lock:
+                    for k, b in items:
+                        if b is None:
+                            # lazy allocation: all-zero cuboids occupy no
+                            # storage on either path
+                            target.delete(k)
+                            self.read_backend.delete(k)
+                    if puts:
+                        target.put_many(puts)
+            if self.cache is not None:
+                self.cache.put_many(items)
+
     # -- single-cuboid ops -------------------------------------------------
     def read_cuboid(self, r: int, m: int, channel: int = 0) -> np.ndarray:
         key = (r, channel, m)
         t0 = time.perf_counter()
+        hit = False
         blob = None
-        if self.write_backend is not None:
-            blob = self.write_backend.get(key)
-        from_write_path = blob is not None
-        if blob is None:
-            blob = self.read_backend.get(key)
-        stats = self.write_stats if from_write_path else self.read_stats
+        if self.cache is not None:
+            hit, blob = self.cache.get_blob(key)
+            with self._stats_lock:
+                if hit:
+                    self.read_stats.reads += 1
+                    self.read_stats.cache_hits += 1
+                else:
+                    self.read_stats.cache_misses += 1
+        if not hit:
+            gen0 = self._read_gen()
+            blob = self._fetch_misses([key])[0]
+            self._absorb_reads([(key, blob)], gen0)
         if blob is None:
             out = self._zeros(r)  # lazy: absent cuboid reads as zeros
         else:
             out = decompress(blob, self._cuboid_shape(r), self._np_dtype)
-            stats.read_bytes += len(blob)
-        stats.reads += 1
-        stats.time_s += time.perf_counter() - t0
+        with self._stats_lock:
+            self.read_stats.time_s += time.perf_counter() - t0
         return out
 
     def write_cuboid(self, r: int, m: int, data: np.ndarray,
@@ -219,21 +398,26 @@ class CuboidStore:
         key = (r, channel, m)
         t0 = time.perf_counter()
         if not data.any():
-            # lazy allocation: all-zero cuboids occupy no storage
-            (self.write_backend or self.read_backend).delete(key)
-            self.read_backend.delete(key)
+            blob = None  # lazy allocation: all-zero cuboids occupy no storage
+        else:
+            blob = compress(data.astype(self._np_dtype),
+                            self.compression_level)
+        self._apply_writes([(key, blob)])
+        with self._stats_lock:
             self.write_stats.writes += 1
+            self.write_stats.write_bytes += len(blob) if blob else 0
             self.write_stats.time_s += time.perf_counter() - t0
-            return
-        blob = compress(data.astype(self._np_dtype), self.compression_level)
-        target = self.write_backend or self.read_backend
-        target.put(key, blob)
-        self.write_stats.writes += 1
-        self.write_stats.write_bytes += len(blob)
-        self.write_stats.time_s += time.perf_counter() - t0
 
     def has_cuboid(self, r: int, m: int, channel: int = 0) -> bool:
         key = (r, channel, m)
+        if self.cache is not None:
+            hit, blob = self.cache.probe(key)
+            if hit:
+                return blob is not None
+        if self.write_behind is not None:
+            found, blob = self.write_behind.peek(key)
+            if found:
+                return blob is not None
         if self.write_backend is not None and key in self.write_backend:
             return True
         return key in self.read_backend
@@ -252,33 +436,95 @@ class CuboidStore:
                    channel: int = 0) -> Dict[int, Optional[bytes]]:
         """Batch-fetch compressed blobs for every cuboid in ``runs``.
 
-        One ``get_many`` per run per path (the planned-cutout substrate):
-        the write path is consulted first (freshest), misses fall through to
-        the read path, absent cuboids come back as ``None`` (lazy zeros).
-        Returns {morton_index: blob | None}.
+        Lookup order per key: hot-cuboid cache (when attached), pending
+        write-behind values (freshest), then one ``get_many`` per run per
+        path — write path first, misses fall through to the read path.
+        Absent cuboids come back as ``None`` (lazy zeros) and are cached as
+        absences.  Returns {morton_index: blob | None}.
         """
         out: Dict[int, Optional[bytes]] = {}
+        cache = self.cache
         for start, stop in runs:
             t0 = time.perf_counter()
-            self.read_stats.seeks += 1
             keys = [(r, channel, m) for m in range(start, stop)]
             blobs: List[Optional[bytes]] = [None] * len(keys)
-            if self.write_backend is not None:
-                blobs = list(self.write_backend.get_many(keys))
-                hits = [b for b in blobs if b is not None]
-                self.write_stats.reads += len(hits)
-                self.write_stats.read_bytes += sum(len(b) for b in hits)
-            miss = [i for i, b in enumerate(blobs) if b is None]
-            if miss:
-                fetched = self.read_backend.get_many([keys[i] for i in miss])
-                for i, blob in zip(miss, fetched):
+            miss_idx = list(range(len(keys)))
+            hits_n = 0
+            if cache is not None:
+                miss_idx = []
+                for i, k in enumerate(keys):
+                    hit, blob = cache.get_blob(k)
+                    if hit:
+                        blobs[i] = blob
+                        hits_n += 1
+                    else:
+                        miss_idx.append(i)
+            with self._stats_lock:
+                self.read_stats.seeks += 1
+                self.read_stats.reads += hits_n
+                if cache is not None:
+                    self.read_stats.cache_hits += hits_n
+                    self.read_stats.cache_misses += len(miss_idx)
+            if miss_idx:
+                gen0 = self._read_gen()
+                sub = [keys[i] for i in miss_idx]
+                fetched = self._fetch_misses(sub)
+                for i, blob in zip(miss_idx, fetched):
                     blobs[i] = blob
-                self.read_stats.reads += len(miss)
-                self.read_stats.read_bytes += sum(
-                    len(b) for b in fetched if b is not None)
-            self.read_stats.time_s += time.perf_counter() - t0
+                self._absorb_reads(list(zip(sub, fetched)), gen0)
+            with self._stats_lock:
+                self.read_stats.time_s += time.perf_counter() - t0
             for m, blob in zip(range(start, stop), blobs):
                 out[m] = blob
+        return out
+
+    def fetch_blocks(self, r: int, runs: Sequence[Tuple[int, int]],
+                     channel: int = 0) -> Dict[int, Optional[np.ndarray]]:
+        """Decoded-cuboid variant of :meth:`fetch_runs` (the cutout
+        engine's cache fast path): hot cuboids skip backend I/O *and*
+        decompression, served as read-only arrays memoized by the cache.
+        Returns {morton_index: ndarray | None} (None = lazy zeros).
+        """
+        shape = self._cuboid_shape(r)
+        dtype = self._np_dtype
+        cache = self.cache
+        if cache is None:
+            blobs = self.fetch_runs(r, runs, channel)
+            return {m: None if b is None else decompress(b, shape, dtype)
+                    for m, b in blobs.items()}
+        out: Dict[int, Optional[np.ndarray]] = {}
+        for start, stop in runs:
+            t0 = time.perf_counter()
+            keys = [(r, channel, m) for m in range(start, stop)]
+            blocks: List[Optional[np.ndarray]] = [None] * len(keys)
+            miss_idx: List[int] = []
+            hits_n = 0
+            for i, k in enumerate(keys):
+                hit, block = cache.get_block(k, shape, dtype)
+                if hit:
+                    blocks[i] = block
+                    hits_n += 1
+                else:
+                    miss_idx.append(i)
+            with self._stats_lock:
+                self.read_stats.seeks += 1
+                self.read_stats.reads += hits_n
+                self.read_stats.cache_hits += hits_n
+                self.read_stats.cache_misses += len(miss_idx)
+            if miss_idx:
+                gen0 = self._read_gen()
+                sub = [keys[i] for i in miss_idx]
+                fetched = self._fetch_misses(sub)
+                decoded = [None if b is None else decompress(b, shape, dtype)
+                           for b in fetched]
+                for i, block in zip(miss_idx, decoded):
+                    blocks[i] = block
+                self._absorb_reads(list(zip(sub, fetched)), gen0,
+                                   blocks=decoded)
+            with self._stats_lock:
+                self.read_stats.time_s += time.perf_counter() - t0
+            for m, block in zip(range(start, stop), blocks):
+                out[m] = block
         return out
 
     def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray],
@@ -291,39 +537,51 @@ class CuboidStore:
         """
         shape = self._cuboid_shape(r)
         t0 = time.perf_counter()
-        target = self.write_backend or self.read_backend
-        puts: List[Tuple[Key, bytes]] = []
+        items: List[Tuple[Key, Optional[bytes]]] = []
+        blob_bytes = 0
         for m, data in blocks.items():
             if tuple(data.shape) != shape:
                 raise ValueError(f"cuboid shape {data.shape} != {shape}")
             key = (r, channel, m)
-            self.write_stats.writes += 1
             if not data.any():
-                target.delete(key)
-                self.read_backend.delete(key)
+                items.append((key, None))
                 continue
             blob = compress(data.astype(self._np_dtype),
                             self.compression_level)
-            self.write_stats.write_bytes += len(blob)
-            puts.append((key, blob))
-        if puts:
-            target.put_many(puts)
-        self.write_stats.time_s += time.perf_counter() - t0
+            blob_bytes += len(blob)
+            items.append((key, blob))
+        if items:
+            self._apply_writes(items)
+        with self._stats_lock:
+            self.write_stats.writes += len(items)
+            self.write_stats.write_bytes += blob_bytes
+            self.write_stats.time_s += time.perf_counter() - t0
 
     def migrate(self) -> int:
-        """Flush write path into the read path (paper: SSD→DB migration)."""
+        """Flush write path into the read path (paper: SSD→DB migration).
+
+        Pending write-behind writes are flushed first (so nothing is in
+        flight), and each key moves under the store lock — a write landing
+        concurrently either precedes the move (and is migrated) or follows
+        it (and stays on the write path, which reads consult first); it can
+        never be silently dropped between the get and the delete.
+        """
+        self.flush()
         if self.write_backend is None:
             return 0
         n = 0
         for key in list(self.write_backend.keys()):
-            blob = self.write_backend.get(key)
-            if blob is not None:
+            with self._lock:
+                blob = self.write_backend.get(key)
+                if blob is None:
+                    continue
                 self.read_backend.put(key, blob)
                 self.write_backend.delete(key)
-                n += 1
+            n += 1
         return n
 
     def stored_keys(self) -> List[Key]:
+        self.flush()  # pending write-behind writes count as stored
         keys = set(self.read_backend.keys())
         if self.write_backend is not None:
             keys |= set(self.write_backend.keys())

@@ -1,8 +1,15 @@
 from .serve_step import make_serve_step, make_prefill_step
 from .batcher import ContinuousBatcher, Request
 # The volume data-service verbs (paper §4.2) are served through the same
-# front door: stateless request-dict handlers over the data cluster.
-from ..cluster import VolumeService, dispatch as volume_dispatch
+# front door: stateless request-dict handlers over the data cluster, with
+# the hot-cuboid cache tier and write-behind ingest queue (paper §6)
+# available to every registered store.
+from ..cluster import (
+    CuboidCache,
+    VolumeService,
+    WriteBehindQueue,
+    dispatch as volume_dispatch,
+)
 
 __all__ = [
     "make_serve_step",
@@ -11,4 +18,6 @@ __all__ = [
     "Request",
     "VolumeService",
     "volume_dispatch",
+    "CuboidCache",
+    "WriteBehindQueue",
 ]

@@ -1,0 +1,474 @@
+"""Coherence + stress suite for the hot-cuboid cache tier and the
+write-behind ingest queue (paper §6 vision).
+
+The contract under test: a `ClusterStore` with a (deliberately tiny,
+eviction-heavy) cache and a write-behind queue attached is **bit-identical
+to an uncached single `CuboidStore`** under any interleaving of reads,
+writes, cutouts, migrations, cache drops, and flushes — and the stats
+counters stay consistent (every read is a cache hit or a cache miss).
+
+Also here: the regression tests for the `migrate()` write-drop race and
+for `DirectoryBackend.keys()` over trees containing foreign entries.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.cluster import (
+    ClusterStore,
+    CuboidCache,
+    VolumeService,
+    WriteBehindQueue,
+    attach_cache,
+    dispatch,
+    enable_write_behind,
+)
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest, write_cutout
+from repro.core.store import CuboidStore, DirectoryBackend, MemoryBackend
+
+SHAPE = (32, 32, 16)
+CUBOID = (8, 8, 4)
+N_CELLS = 64  # 4x4x4 grid
+
+
+def spec(shape=SHAPE, **kw):
+    return DatasetSpec(name="cc", volume_shape=shape, dtype="uint8",
+                       base_cuboid=CUBOID, **kw)
+
+
+def make_pair(n_nodes, cache_bytes=6 << 10, max_items=16):
+    """(uncached reference store, cached+write-behind cluster under test).
+
+    The default cache budget holds only a few segments, so eviction fires
+    constantly — coherence must survive it.
+    """
+    ref = CuboidStore(spec())
+    sub = ClusterStore(spec(), n_nodes=n_nodes, cache_bytes=cache_bytes,
+                       write_behind=True, write_behind_items=max_items)
+    return ref, sub
+
+
+def rand_box(rng):
+    lo = [int(rng.integers(0, s - 1)) for s in SHAPE]
+    hi = [int(rng.integers(l + 1, s + 1)) for l, s in zip(lo, SHAPE)]
+    return lo, hi
+
+
+def apply_op(store, op):
+    kind = op[0]
+    if kind == "read_cuboid":
+        return store.read_cuboid(0, op[1])
+    if kind == "write_cuboid":
+        store.write_cuboid(0, op[1], op[2])
+        return None
+    if kind == "cutout":
+        return cutout(store, 0, op[1], op[2])
+    if kind == "write_cutout":
+        write_cutout(store, 0, op[1], op[2])
+        return None
+    if kind == "migrate":
+        store.migrate()
+        return None
+    if kind == "flush":
+        if hasattr(store, "flush"):
+            store.flush()
+        return None
+    if kind == "drop_cache":
+        # subject-only: dropping cached entries must be invisible
+        if isinstance(store, ClusterStore):
+            for node in store.nodes:
+                if node.cache is not None:
+                    node.cache.clear()
+        return None
+    raise AssertionError(f"unknown op {kind}")
+
+
+def random_ops(rng, n_ops):
+    grid_block = CUBOID
+    ops = []
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.20:
+            ops.append(("read_cuboid", int(rng.integers(0, N_CELLS))))
+        elif roll < 0.40:
+            data = rng.integers(0, 4, size=grid_block).astype(np.uint8)
+            if rng.random() < 0.2:
+                data[:] = 0  # lazy-zero delete path
+            ops.append(("write_cuboid", int(rng.integers(0, N_CELLS)), data))
+        elif roll < 0.60:
+            ops.append(("cutout", *rand_box(rng)))
+        elif roll < 0.80:
+            lo, hi = rand_box(rng)
+            shape = [h - l for l, h in zip(lo, hi)]
+            data = rng.integers(0, 255, size=shape).astype(np.uint8)
+            ops.append(("write_cutout", lo, data))
+        elif roll < 0.88:
+            ops.append(("migrate",))
+        elif roll < 0.94:
+            ops.append(("flush",))
+        else:
+            ops.append(("drop_cache",))
+    return ops
+
+
+def run_interleaving(n_nodes, ops):
+    ref, sub = make_pair(n_nodes)
+    try:
+        for op in ops:
+            want = apply_op(ref, op)
+            got = apply_op(sub, op)
+            if want is not None:
+                np.testing.assert_array_equal(got, want)
+        # final state identical everywhere, through both read paths
+        np.testing.assert_array_equal(
+            cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+        sub.flush()
+        assert sub.stored_keys() == ref.stored_keys()
+        rs, ws = sub.read_stats, sub.write_stats
+        assert rs.reads + ws.reads == rs.cache_hits + rs.cache_misses
+    finally:
+        sub.close()
+
+
+# ------------------------------------------------------- coherence (seeded) --
+
+
+@pytest.mark.parametrize("n_nodes", [1, 2, 4])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cached_cluster_matches_uncached_reference(n_nodes, seed):
+    """Random op interleavings: cached+write-behind cluster is bit-identical
+    to the uncached reference store, under constant eviction."""
+    rng = np.random.default_rng(seed * 7 + n_nodes)
+    run_interleaving(n_nodes, random_ops(rng, 60))
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+           st.sampled_from([1, 2, 4]),
+           st.integers(min_value=5, max_value=40))
+    @settings(max_examples=25, deadline=None)
+    def test_cached_cluster_coherence_property(seed, n_nodes, n_ops):
+        rng = np.random.default_rng(seed)
+        run_interleaving(n_nodes, random_ops(rng, n_ops))
+
+
+def test_eviction_is_invisible_and_bounded():
+    vol = np.random.default_rng(3).integers(1, 255, SHAPE, dtype=np.uint8)
+    ref = CuboidStore(spec())
+    ingest(ref, 0, vol)
+    store = CuboidStore(spec())
+    cache = attach_cache(store, CuboidCache(max_bytes=4 << 10, segment_bits=2))
+    ingest(store, 0, vol)
+    for seed in range(6):
+        lo, hi = rand_box(np.random.default_rng(seed))
+        np.testing.assert_array_equal(cutout(store, 0, lo, hi),
+                                      cutout(ref, 0, lo, hi))
+    assert cache.evictions > 0  # the budget really forced segment drops
+    # budget holds whenever more than one segment is resident
+    assert cache.n_segments <= 1 or cache.bytes <= cache.max_bytes
+
+
+def test_cache_hit_miss_counters_warm_vs_cold():
+    vol = np.random.default_rng(4).integers(1, 255, SHAPE, dtype=np.uint8)
+    store = CuboidStore(spec())
+    attach_cache(store, 64 << 20)
+    ingest(store, 0, vol)
+    box = ((0, 0, 0), SHAPE)
+    cutout(store, 0, *box)
+    h0, m0 = store.read_stats.cache_hits, store.read_stats.cache_misses
+    cutout(store, 0, *box)  # warm: all hits, no new misses
+    assert store.read_stats.cache_misses == m0
+    assert store.read_stats.cache_hits == h0 + N_CELLS
+    rs, ws = store.read_stats, store.write_stats
+    assert rs.reads + ws.reads == rs.cache_hits + rs.cache_misses
+
+
+def test_read_your_writes_before_flush():
+    """A write is readable the moment the call returns, even while the
+    write-behind queue still holds it (and durable only after flush)."""
+    store = CuboidStore(spec(), backend=MemoryBackend(),
+                        write_path_backend=MemoryBackend())
+    attach_cache(store, 64 << 20)
+    queue = enable_write_behind(store, max_items=256, batch_items=256)
+    block = np.full(CUBOID, 7, np.uint8)
+    for m in range(N_CELLS):
+        store.write_cuboid(0, m, block)
+        np.testing.assert_array_equal(store.read_cuboid(0, m), block)
+    drained = store.flush()
+    assert drained >= 0 and queue.depth == 0
+    assert queue.applied == queue.enqueued == N_CELLS  # distinct keys
+    # after the barrier every write is in the backend
+    assert len(store.stored_keys()) == N_CELLS
+    store.close()
+
+
+# ----------------------------------------------------------------- stress --
+
+
+def test_concurrent_cutouts_and_write_behind_ingest():
+    """N threads hammer one cached+write-behind ClusterStore with
+    overlapping cutouts and put_cutout-style writes: no deadlock, no lost
+    writes after flush(), consistent counters."""
+    n_threads, n_rounds = 6, 8
+    base = np.random.default_rng(11).integers(1, 255, SHAPE, dtype=np.uint8)
+    sub = ClusterStore(spec(), n_nodes=2, cache_bytes=32 << 10,
+                       write_behind=True, write_behind_items=8)
+    ingest(sub, 0, base)  # shared channel 0, read-only below
+    refs = {t: CuboidStore(spec()) for t in range(n_threads)}
+    failures = []
+
+    def worker(tid):
+        rng = np.random.default_rng(100 + tid)
+        ch = tid + 1  # each thread owns one channel; channel 0 is shared
+        try:
+            for _ in range(n_rounds):
+                lo, hi = rand_box(rng)
+                shape = [h - l for l, h in zip(lo, hi)]
+                data = rng.integers(1, 255, size=shape).astype(np.uint8)
+                write_cutout(sub, 0, lo, data, channel=ch)
+                write_cutout(refs[tid], 0, lo, data, channel=ch)
+                lo2, hi2 = rand_box(rng)
+                cutout(sub, 0, lo2, hi2)  # overlapping shared reads
+        except Exception as e:  # pragma: no cover - surfaced via failures
+            failures.append((tid, e))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "stress worker deadlocked"
+    assert not failures, failures
+    sub.flush()
+    # no lost writes: every thread's channel equals its serial replay
+    for tid in range(n_threads):
+        np.testing.assert_array_equal(
+            cutout(sub, 0, (0, 0, 0), SHAPE, channel=tid + 1),
+            cutout(refs[tid], 0, (0, 0, 0), SHAPE, channel=tid + 1))
+    # shared channel untouched by the ingest traffic
+    np.testing.assert_array_equal(cutout(sub, 0, (0, 0, 0), SHAPE), base)
+    rs, ws = sub.read_stats, sub.write_stats
+    assert rs.reads + ws.reads == rs.cache_hits + rs.cache_misses
+    q = sub.queue_counters()
+    # applied <= enqueued: re-enqueues of a still-pending key coalesce
+    # (last write wins) — but nothing may remain pending after flush
+    assert q["depth"] == 0 and 0 < q["applied"] <= q["enqueued"]
+    sub.close()
+
+
+def test_write_behind_backpressure_bounds_queue():
+    store = CuboidStore(spec())
+    queue = enable_write_behind(store, max_items=4, batch_items=2)
+    block = np.full(CUBOID, 9, np.uint8)
+    for m in range(32):
+        store.write_cuboid(0, m, block)
+    store.flush()
+    assert queue.depth_peak <= 4
+    assert queue.applied == queue.enqueued == 32
+    store.close()
+
+
+def test_write_behind_error_is_loud():
+    class FailingBackend(MemoryBackend):
+        def put_many(self, items):
+            raise IOError("disk full")
+
+    store = CuboidStore(spec(), backend=FailingBackend())
+    enable_write_behind(store, max_items=8)
+    store.write_cuboid(0, 0, np.full(CUBOID, 1, np.uint8))
+    with pytest.raises(RuntimeError, match="write-behind"):
+        store.flush()
+    with pytest.raises(RuntimeError):
+        store.close()
+    store.write_behind = None  # detach the poisoned queue
+
+
+def test_write_behind_close_is_idempotent_and_store_survives():
+    store = CuboidStore(spec())
+    enable_write_behind(store)
+    block = np.full(CUBOID, 3, np.uint8)
+    store.write_cuboid(0, 1, block)
+    store.close()
+    store.close()  # second close is a no-op
+    # after close the store falls back to synchronous writes
+    store.write_cuboid(0, 2, block)
+    np.testing.assert_array_equal(store.read_cuboid(0, 1), block)
+    np.testing.assert_array_equal(store.read_cuboid(0, 2), block)
+
+
+# ------------------------------------------------- migrate race regression --
+
+
+class HookedWritePath(MemoryBackend):
+    """Write-path backend whose ``get`` fires a one-shot hook — used to
+    open the historical migrate() window deterministically."""
+
+    def __init__(self):
+        super().__init__()
+        self.hook = None
+
+    def get(self, key):
+        hook, self.hook = self.hook, None
+        if hook is not None:
+            hook(key)
+        return super().get(key)
+
+
+def test_migrate_does_not_drop_concurrent_write():
+    """Regression: a write landing between migrate()'s get and delete used
+    to be silently dropped.  Per-key migration is now atomic under the
+    store lock, so the racing write survives on the write path."""
+    write_path = HookedWritePath()
+    store = CuboidStore(spec(), backend=MemoryBackend(),
+                        write_path_backend=write_path)
+    old = np.full(CUBOID, 1, np.uint8)
+    new = np.full(CUBOID, 2, np.uint8)
+    store.write_cuboid(0, 0, old)
+
+    racer = threading.Thread(target=lambda: store.write_cuboid(0, 0, new))
+
+    def hook(key):
+        # fired from inside migrate's critical section: the racing write
+        # must serialize against it, not interleave
+        racer.start()
+        time.sleep(0.15)  # give the racer every chance to sneak in
+
+    write_path.hook = hook
+    store.migrate()
+    racer.join(timeout=10)
+    assert not racer.is_alive()
+    np.testing.assert_array_equal(store.read_cuboid(0, 0), new)
+    # the racing write survived on some path (not silently dropped)
+    assert store.has_cuboid(0, 0)
+    store.migrate()
+    np.testing.assert_array_equal(store.read_cuboid(0, 0), new)
+
+
+def test_migrate_flushes_write_behind_first():
+    store = CuboidStore(spec(), backend=MemoryBackend(),
+                        write_path_backend=MemoryBackend())
+    enable_write_behind(store)
+    block = np.full(CUBOID, 5, np.uint8)
+    for m in range(8):
+        store.write_cuboid(0, m, block)
+    n = store.migrate()
+    assert n == 8  # nothing in flight was missed
+    assert len(list(store.write_backend.keys())) == 0
+    assert len(list(store.read_backend.keys())) == 8
+    store.close()
+
+
+# -------------------------------------------- DirectoryBackend hardening --
+
+
+def test_directory_backend_keys_skips_foreign_entries(tmp_path):
+    root = str(tmp_path / "db")
+    backend = DirectoryBackend(root)
+    backend.put((0, 0, 5), b"blob5")
+    backend.put((1, 2, 9), b"blob9")
+    # foreign droppings at every level of the tree
+    (tmp_path / "db" / "README.md").write_text("not a resolution dir")
+    (tmp_path / "db" / "scratch").mkdir()
+    (tmp_path / "db" / "0" / "notes.txt").write_text("not a channel dir")
+    (tmp_path / "db" / "0" / "0" / "foreign.bin").write_text("not hex")
+    (tmp_path / "db" / "0" / "0" / "data.json").write_text("{}")
+    (tmp_path / "db" / "0" / "0" / f"{7:016x}.bin.tmp").write_text("torn")
+    (tmp_path / "db" / "0" / "0" / f"{3:016x}.bin").mkdir()
+    assert sorted(backend.keys()) == [(0, 0, 5), (1, 2, 9)]
+    # a store over the dirty tree still enumerates and reads cleanly
+    store = CuboidStore(spec(), backend=backend)
+    assert store.stored_keys() == [(0, 0, 5), (1, 2, 9)]
+
+
+# ------------------------------------------------------------ service verbs --
+
+
+def test_flush_and_stats_verbs():
+    svc = VolumeService()
+    store = ClusterStore(spec(), n_nodes=2, cache_bytes=1 << 20,
+                         write_behind=True)
+    vol = np.random.default_rng(9).integers(1, 255, SHAPE, dtype=np.uint8)
+    ingest(store, 0, vol)
+    svc.add_dataset("d", store)
+
+    put = dispatch(svc, {"verb": "PUT /cutout", "dataset": "d",
+                         "lo": (4, 4, 4),
+                         "data": np.full((8, 8, 4), 42, np.uint8)})
+    assert put["status"] == 200
+
+    got = dispatch(svc, {"verb": "GET /cutout", "dataset": "d",
+                         "lo": (4, 4, 4), "hi": (12, 12, 8)})
+    np.testing.assert_array_equal(got["data"], 42)  # read-your-writes
+
+    fl = dispatch(svc, {"verb": "POST /flush", "dataset": "d"})
+    assert fl["status"] == 200 and "d" in fl["flushed"]
+    assert dispatch(svc, {"verb": "POST /flush"})["status"] == 200
+    assert dispatch(svc, {"verb": "POST /flush",
+                          "dataset": "nope"})["status"] == 404
+
+    stats = dispatch(svc, {"verb": "GET /stats", "dataset": "d"})
+    assert stats["status"] == 200
+    assert stats["read"]["cache_hits"] + stats["read"]["cache_misses"] > 0
+    assert stats["read"]["reads"] + stats["write"]["reads"] == (
+        stats["read"]["cache_hits"] + stats["read"]["cache_misses"])
+    assert stats["cache"]["hits"] >= 0 and stats["queue"]["depth"] == 0
+    assert dispatch(svc, {"verb": "GET /stats",
+                          "dataset": "nope"})["status"] == 404
+
+    sync = dispatch(svc, {"verb": "PUT /cutout", "dataset": "d",
+                          "lo": (0, 0, 0), "sync": True,
+                          "data": np.full((8, 8, 4), 17, np.uint8)})
+    assert sync["status"] == 200 and "flushed" in sync
+    store.close()
+
+
+def test_write_behind_queue_peek_and_last_write_wins():
+    applied = {}
+
+    def put_many(items):
+        applied.update(items)
+
+    def delete(key):
+        applied.pop(key, None)
+
+    gate = threading.Lock()
+    gate.acquire()  # hold the apply lock so writes stay pending
+
+    queue = WriteBehindQueue(put_many, delete, apply_lock=gate,
+                             max_items=8, batch_items=4)
+    try:
+        queue.enqueue((0, 0, 1), b"v1")
+        queue.enqueue((0, 0, 1), b"v2")  # rewrite: replaces, never blocks
+        queue.enqueue((0, 0, 2), None)
+        assert queue.peek((0, 0, 1)) == (True, b"v2")
+        assert queue.peek((0, 0, 2)) == (True, None)
+        assert queue.peek((0, 0, 3)) == (False, None)
+        assert queue.depth == 2
+        gate.release()
+        queue.flush()
+        assert applied == {(0, 0, 1): b"v2"}
+        assert queue.peek((0, 0, 1)) == (False, None)
+    finally:
+        queue.close()
+
+
+def test_cache_env_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_BYTES", str(1 << 20))
+    monkeypatch.setenv("REPRO_WRITE_BEHIND", "1")
+    store = ClusterStore(spec(), n_nodes=2)
+    assert store.has_cache
+    assert all(n.write_behind is not None for n in store.nodes)
+    store.close()
+    monkeypatch.setenv("REPRO_CACHE_BYTES", "0")
+    monkeypatch.setenv("REPRO_WRITE_BEHIND", "0")
+    store = ClusterStore(spec(), n_nodes=2)
+    assert not store.has_cache
+    assert all(n.write_behind is None for n in store.nodes)
+    store.close()
