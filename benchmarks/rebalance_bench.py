@@ -1,0 +1,135 @@
+"""Elastic-rebalancing benchmarks (paper §6: dynamically redistribute data).
+
+Two stories:
+
+  * ``migrate``: a 2->4-node rebalance over an ingested volume — segment
+    migration throughput (keys/s and MB/s of compressed blobs moved) and
+    the resulting occupancy spread (`keys_per_node`), plus the shrink
+    back to 2 nodes.
+  * ``read latency during a move``: reader threads sample random cutouts
+    continuously while the rebalance runs; rows report the baseline
+    latency, the during-move latency, and their ratio — the paper's
+    requirement that redistribution not take the cluster offline.  Every
+    sampled cutout is verified bit-identical against the pre-ingested
+    volume (zero stale reads).
+
+``BENCH_PRESET=tiny`` shrinks volumes for the CI smoke job.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import ClusterStore
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    return (64, 64, 64) if preset() == "tiny" else (256, 256, 256)
+
+
+def _spec(shape):
+    return DatasetSpec(name="rebalance_bench", volume_shape=shape,
+                       dtype="uint8", base_cuboid=(32, 32, 16))
+
+
+def _boxes(shape, n, seed=31):
+    rng = np.random.default_rng(seed)
+    size = tuple(max(8, s // 4) for s in shape)
+    out = []
+    for _ in range(n):
+        lo = tuple(int(rng.integers(0, s - sz)) for s, sz in zip(shape, size))
+        out.append((lo, tuple(l + sz for l, sz in zip(lo, size))))
+    return out
+
+
+def migration_and_read_latency() -> List[Dict]:
+    shape = _shape()
+    vol = np.random.default_rng(17).integers(0, 255, size=shape,
+                                             dtype=np.uint8)
+    cluster = ClusterStore(_spec(shape), n_nodes=2,
+                           cache_bytes=64 << 20, write_behind=True)
+    ingest(cluster, 0, vol)
+    boxes = _boxes(shape, n=6)
+
+    # baseline read latency (steady 2-node topology, warm-ish)
+    samples_before: List[float] = []
+    for lo, hi in boxes:
+        t0 = time.perf_counter()
+        cutout(cluster, 0, lo, hi)
+        samples_before.append(time.perf_counter() - t0)
+
+    # readers sample cutouts while the 2->4 rebalance migrates segments
+    samples_during: List[float] = []
+    stale = [0]
+    stop = threading.Event()
+    lock = threading.Lock()
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        while not stop.is_set():
+            lo, hi = boxes[int(rng.integers(0, len(boxes)))]
+            t0 = time.perf_counter()
+            got = cutout(cluster, 0, lo, hi)
+            dt = time.perf_counter() - t0
+            sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+            ok = np.array_equal(got, vol[sl])
+            with lock:
+                samples_during.append(dt)
+                if not ok:
+                    stale[0] += 1
+
+    threads = [threading.Thread(target=reader, args=(41 + i,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    t0 = time.perf_counter()
+    stats = cluster.rebalance(target=4)
+    t_move = time.perf_counter() - t0
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+
+    per_node = cluster.keys_per_node()
+    t0 = time.perf_counter()
+    shrink = cluster.rebalance(target=2)
+    t_shrink = time.perf_counter() - t0
+    cluster.close()
+
+    keys_s = stats["moved_keys"] / max(t_move, 1e-9)
+    mb_s = stats["moved_bytes"] / 1e6 / max(t_move, 1e-9)
+    mean_before = float(np.mean(samples_before))
+    mean_during = float(np.mean(samples_during)) if samples_during \
+        else mean_before
+    rows = [
+        {"name": f"rebalance/migrate_2to4/{shape[0]}",
+         "us_per_call": t_move * 1e6,
+         "derived": (f"{stats['moved_keys']}keys;{keys_s:.0f}keys_s"
+                     f";{mb_s:.1f}MBps"
+                     f";spread={max(per_node) - min(per_node)}")},
+        {"name": f"rebalance/migrate_4to2/{shape[0]}",
+         "us_per_call": t_shrink * 1e6,
+         "derived": f"{shrink['moved_keys']}keys"},
+        {"name": f"rebalance/read_baseline/{shape[0]}",
+         "us_per_call": mean_before * 1e6,
+         "derived": f"{len(samples_before)}samples"},
+        {"name": f"rebalance/read_during_move/{shape[0]}",
+         "us_per_call": mean_during * 1e6,
+         "derived": (f"{mean_during / mean_before:.2f}x_vs_baseline"
+                     f";{len(samples_during)}samples"
+                     f";stale_reads={stale[0]}")},
+    ]
+    return rows
+
+
+def rows() -> List[Dict]:
+    return migration_and_read_latency()

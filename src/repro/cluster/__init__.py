@@ -1,6 +1,8 @@
-"""Spatially-partitioned data cluster (paper §4.1): sharded stores,
-stateless routing, the hot-cuboid cache tier + write-behind ingest queue
-(paper §6 vision), and the RESTful-style service verbs over them."""
+"""Spatially-partitioned *elastic* data cluster (paper §4.1 + §6):
+sharded stores, stateless routing over movable curve partitions, live
+rebalancing with segment migration, the hot-cuboid cache tier +
+write-behind ingest queue, and the RESTful-style service verbs over
+them."""
 
 from .cache import (
     CuboidCache,
@@ -17,15 +19,18 @@ from .handlers import (
     get_object_cutout,
     get_projection,
     get_stats,
+    get_topology,
     post_flush,
+    post_rebalance,
     put_cutout,
 )
-from .router import Router
+from .router import Partition, Router
 from .store import ClusterStore
 
 __all__ = [
     "ClusterStore",
     "Router",
+    "Partition",
     "CuboidCache",
     "WriteBehindQueue",
     "attach_cache",
@@ -40,4 +45,6 @@ __all__ = [
     "get_object_cutout",
     "post_flush",
     "get_stats",
+    "get_topology",
+    "post_rebalance",
 ]

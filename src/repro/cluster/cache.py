@@ -225,16 +225,26 @@ class CuboidCache:
         with self._lock:
             self._store(key, _Entry(blob=blob, block=block))
 
+    def _invalidate_locked(self, key: Key) -> None:
+        sk = self._seg_key(key)
+        seg = self._segments.get(sk)
+        entry = seg.entries.pop(key, None) if seg is not None else None
+        if entry is not None:
+            seg.nbytes -= entry.nbytes
+            self.bytes -= entry.nbytes
+            if not seg.entries:
+                del self._segments[sk]
+
     def invalidate(self, key: Key) -> None:
         with self._lock:
-            sk = self._seg_key(key)
-            seg = self._segments.get(sk)
-            entry = seg.entries.pop(key, None) if seg is not None else None
-            if entry is not None:
-                seg.nbytes -= entry.nbytes
-                self.bytes -= entry.nbytes
-                if not seg.entries:
-                    del self._segments[sk]
+            self._invalidate_locked(key)
+
+    def invalidate_many(self, keys: Sequence[Key]) -> None:
+        """Drop entries wholesale (segment migration moved them away);
+        unlike a cached absence this frees the bytes immediately."""
+        with self._lock:
+            for key in keys:
+                self._invalidate_locked(key)
 
     def clear(self) -> None:
         with self._lock:
@@ -358,6 +368,14 @@ class WriteBehindQueue:
     @property
     def depth(self) -> int:
         return len(self._pending)
+
+    def pending_keys(self) -> Tuple[set, set]:
+        """Snapshot of pending ``(put_keys, delete_keys)`` (last write
+        wins) — lets occupancy be counted without forcing a flush."""
+        with self._mu:
+            puts = {k for k, (_, b) in self._pending.items() if b is not None}
+            dels = {k for k, (_, b) in self._pending.items() if b is None}
+        return puts, dels
 
     # -- flusher -----------------------------------------------------------
     def _run(self) -> None:

@@ -23,6 +23,15 @@ Consistency contract (the cache tier + write-behind queue, paper §6):
   every previously accepted write has been applied to the node backends.
 * ``GET /stats`` exposes the path/cache/queue counters (hits, misses,
   queue depth) a deployment monitors to size the tiers.
+
+Elasticity contract (paper §6 "dynamically redistribute data"):
+
+* ``GET /topology`` reports the cluster layout — node count, the explicit
+  per-resolution curve partitions, and per-node key occupancy.
+* ``POST /rebalance`` re-cuts the partitions by occupancy (optionally
+  growing/shrinking to ``target`` nodes) and migrates keys *live*:
+  cutout reads and writes issued concurrently through the service remain
+  bit-identical before, during, and after the move.
 """
 
 from __future__ import annotations
@@ -81,7 +90,11 @@ def _decode_volume(request: Request) -> np.ndarray:
     data = request["data"]
     if request.get("encode") == "zlib":
         raw = zlib.decompress(data)
-        return np.frombuffer(raw, dtype=np.dtype(request["dtype"])).reshape(request["shape"])
+        vol = np.frombuffer(raw, dtype=np.dtype(request["dtype"])).reshape(request["shape"])
+        # frombuffer over bytes yields a read-only view; write paths that
+        # normalize/pad the block in place would raise "assignment
+        # destination is read-only", so hand over a writable copy.
+        return vol.copy()
     return np.asarray(data)
 
 
@@ -232,6 +245,53 @@ def get_stats(service: VolumeService, request: Request) -> Response:
     return body
 
 
+def get_topology(service: VolumeService, request: Request) -> Response:
+    """``GET /topology`` — the dataset's cluster layout (paper §6).
+
+    For an elastic `ClusterStore`: node count, per-resolution curve
+    segments, per-node key occupancy (the rebalance signal), and whether a
+    migration is in flight.  Single-node stores report a degenerate
+    one-node topology with ``elastic: false``.
+    """
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    if hasattr(store, "topology"):
+        return {"status": 200, **store.topology()}
+    # key_count (not stored_keys) so a monitoring poll never drains the
+    # write-behind queue it is observing
+    occupancy = (store.key_count() if hasattr(store, "key_count")
+                 else len(store.stored_keys()))
+    return {
+        "status": 200,
+        "n_nodes": 1,
+        "elastic": False,
+        "rebalancing": False,
+        "keys_per_node": [occupancy],
+    }
+
+
+def post_rebalance(service: VolumeService, request: Request) -> Response:
+    """``POST /rebalance`` — re-partition by occupancy, migrating live.
+
+    ``{"target": n}`` grows/shrinks the cluster to ``n`` nodes; without a
+    target, boundaries move but the node count stays.  Reads and writes
+    issued concurrently through the service stay bit-identical during the
+    move.  Responds with the migration stats and the resulting topology.
+    """
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    if not hasattr(store, "rebalance"):
+        return _error(400, "dataset is not elastic (single-node store)")
+    try:
+        target = request.get("target")
+        stats = store.rebalance(target=None if target is None else int(target))
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad rebalance request: {e}")
+    return {"status": 200, **stats, "topology": store.topology()}
+
+
 HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
     "GET /cutout": get_cutout,
     "PUT /cutout": put_cutout,
@@ -240,6 +300,8 @@ HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
     "GET /objects/cutout": get_object_cutout,
     "POST /flush": post_flush,
     "GET /stats": get_stats,
+    "GET /topology": get_topology,
+    "POST /rebalance": post_rebalance,
 }
 
 

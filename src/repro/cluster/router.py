@@ -2,7 +2,7 @@
 
 The paper shards a dataset across database nodes by partitioning the Morton
 curve into contiguous segments; any front-end web server can route any
-request because ownership is a pure function of (dataset spec, node count,
+request because ownership is a pure function of (dataset spec, partition,
 morton index) — no routing table, no directory service.  :class:`Router` is
 that pure function made explicit: it owns no sockets and no state, so a
 `ClusterStore` holds one and so could a fleet of stateless web front-ends.
@@ -11,12 +11,19 @@ Partitioning is per resolution level (each level has its own curve length);
 every node therefore owns a spatially compact region at *every* level, and
 runs within one node stay sequential (paper: reads on a node are few long
 sequential I/Os even after sharding).
+
+Ownership is evaluated against an explicit per-resolution
+:class:`repro.core.morton.Partition` (a curve boundary list), so boundaries
+can *move*: rebalancing builds a new Router with shifted bounds and swaps
+it in atomically (paper §6 "dynamically redistribute data").  Resolutions
+without an explicit partition fall back to the even `partition_curve`
+split, which is what a freshly-built cluster uses everywhere.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Mapping, Tuple
 
 import numpy as np
 
@@ -24,56 +31,79 @@ from ..core import morton
 from ..core.cuboid import DatasetSpec
 
 Runs = morton.Runs
+Partition = morton.Partition
 
 
 @dataclasses.dataclass(frozen=True)
 class Router:
-    """Pure ownership function for a curve-partitioned dataset."""
+    """Pure ownership function for a curve-partitioned dataset.
+
+    ``partitions`` maps resolution -> explicit :class:`Partition` override;
+    missing resolutions use the even split over ``n_nodes``.  Routers are
+    immutable — rebalancing derives a new one via :meth:`with_partitions`
+    and publishes it atomically, so every request evaluates one consistent
+    boundary set end to end.
+    """
 
     spec: DatasetSpec
     n_nodes: int
+    partitions: Mapping[int, Partition] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.n_nodes <= 0:
             raise ValueError("n_nodes must be positive")
+        for r, part in self.partitions.items():
+            if part.n_parts != self.n_nodes:
+                raise ValueError(
+                    f"partition at r={r} has {part.n_parts} parts, expected {self.n_nodes}"
+                )
 
     def n_cells(self, r: int) -> int:
         return self.spec.grid(r).n_cells
 
+    def partition(self, r: int) -> Partition:
+        """The explicit curve partition at resolution ``r``."""
+        part = self.partitions.get(r)
+        if part is not None:
+            return part
+        return Partition.even(self.n_cells(r), self.n_nodes)
+
+    def with_partitions(
+        self, partitions: Mapping[int, Partition], n_nodes: int | None = None
+    ) -> "Router":
+        """A new Router with updated boundaries (rebalance publishes this)."""
+        merged = dict(self.partitions)
+        merged.update(partitions)
+        return Router(self.spec, self.n_nodes if n_nodes is None else n_nodes, merged)
+
     def segments(self, r: int) -> List[Tuple[int, int]]:
         """The curve partition at resolution ``r``: node i owns segment i."""
-        return morton.partition_curve(self.n_cells(r), self.n_nodes)
+        return self.partition(r).segments()
 
     def owner(self, r: int, m: int) -> int:
         """Owning node of one morton index."""
-        return int(morton.owner_of(m, self.n_cells(r), self.n_nodes))
+        return int(self.partition(r).owner(m))
 
     def owners(self, r: int, cells) -> np.ndarray:
         """Vectorized owner lookup for an array of morton indexes."""
-        cells = np.asarray(cells, dtype=np.int64)
-        return morton.owner_of(cells, self.n_cells(r), self.n_nodes)
+        return self.partition(r).owner(np.asarray(cells, dtype=np.int64))
 
     def split_run(self, r: int, start: int, stop: int) -> List[Tuple[int, int, int]]:
         """Split one curve run at partition boundaries.
 
         Returns [(node, start, stop), ...] in curve order — each piece is
-        wholly owned by one node, so node-local I/O stays sequential.
+        non-empty and wholly owned by one node, so node-local I/O stays
+        sequential.  Empty segments (a node owning nothing at this
+        resolution) are skipped.
         """
-        pieces = []
-        segments = self.segments(r)
-        node = self.owner(r, start)
-        while start < stop:
-            piece_stop = min(stop, segments[node][1])
-            pieces.append((node, start, piece_stop))
-            start = piece_stop
-            node += 1
-        return pieces
+        return self.partition(r).split(start, stop)
 
     def split_runs(self, r: int, runs: Runs) -> Dict[int, Runs]:
         """Group a run schedule by owning node: {node: runs on that node}."""
+        part = self.partition(r)
         by_node: Dict[int, Runs] = {}
         for start, stop in runs:
-            for node, a, b in self.split_run(r, start, stop):
+            for node, a, b in part.split(start, stop):
                 by_node.setdefault(node, []).append((a, b))
         return by_node
 

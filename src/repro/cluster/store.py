@@ -1,4 +1,4 @@
-"""Spatially-partitioned cluster store (paper §4.1).
+"""Spatially-partitioned *elastic* cluster store (paper §4.1 + §6).
 
 A :class:`ClusterStore` owns N node shards — each a full `CuboidStore` with
 its own read/write backends and `PathStats` (the paper's database node with
@@ -9,24 +9,56 @@ same storage interface the cutout engine drives (`fetch_runs`,
 unchanged over a cluster, and batch I/O fans out across nodes in parallel
 (one thread per touched node: the paper's parallel-requests doctrine C8
 applied *inside* one request).
+
+Elasticity (paper §6 "dynamically redistribute data"): the cluster is not
+pinned to its initial shard count.  ``rebalance(target=...)`` re-cuts the
+per-resolution curve partitions by occupancy and migrates the keys whose
+owner changes *live* — concurrent reads and writes stay bit-identical
+throughout.  ``add_node()`` / ``remove_node()`` grow and shrink the node
+set through the same protocol.  The migration protocol, per segment move:
+
+1. **register** — the move set is published and a grace period waits for
+   in-flight ops, so every subsequent write to a moving key *double-writes*
+   to both the old and the new owner (through each node's write-behind
+   queue when attached — the queue is the natural double-write buffer).
+2. **copy** — existing keys in the moving range are streamed from the old
+   owner to the new one as compressed blobs, in small batches under the
+   move lock, so a racing double-write can never be clobbered by a stale
+   copy.  Reads keep routing to the old owner, which stays complete.
+3. **swap** — a new Router (new `Partition` boundaries) is published
+   atomically; a grace period drains readers still on the old boundaries.
+4. **cleanup** — after a final writer grace period, moved keys are deleted
+   from the old owner and dropped from its `CuboidCache` (the new owner's
+   cache absorbed them during the copy).
+
+Topology (the node tuple + the Router) is an immutable snapshot swapped
+atomically, so every op sees one consistent (nodes, boundaries) pair even
+while a rebalance is in flight; `GET /topology` exposes it.
 """
 
 from __future__ import annotations
 
 import concurrent.futures as cf
+import contextlib
 import dataclasses
 import functools
 import os
+import threading
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import morton
 from ..core.cuboid import DatasetSpec
 from ..core.store import CuboidStore, Key, MemoryBackend, PathStats
 from .cache import attach_cache, enable_write_behind
-from .router import Router
+from .router import Partition, Router
 
 NodeFactory = Callable[[int, DatasetSpec], CuboidStore]
+
+# (start, stop, src_node, dst_node) — one migrating curve segment.
+Move = Tuple[int, int, int, int]
 
 
 def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
@@ -34,12 +66,79 @@ def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
     return CuboidStore(spec, backend=MemoryBackend(), write_path_backend=MemoryBackend())
 
 
+# Gauges describe *current* per-node occupancy, not accumulated work:
+# summing them over-reports (a 2-node cluster would claim twice the real
+# queue peak), so the cluster aggregate takes the max instead.
+_GAUGE_FIELDS = frozenset({"queue_depth", "queue_peak"})
+
+
 def _sum_stats(parts: Sequence[PathStats]) -> PathStats:
     out = PathStats()
     for p in parts:
         for f in dataclasses.fields(PathStats):
-            setattr(out, f.name, getattr(out, f.name) + getattr(p, f.name))
+            if f.name in _GAUGE_FIELDS:
+                setattr(out, f.name, max(getattr(out, f.name), getattr(p, f.name)))
+            else:
+                setattr(out, f.name, getattr(out, f.name) + getattr(p, f.name))
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class _Topology:
+    """One atomic (nodes, router) snapshot — ops resolve both together."""
+
+    nodes: Tuple[CuboidStore, ...]
+    router: Router
+
+
+class _OpGate:
+    """RCU-style grace periods for topology changes.
+
+    Data ops enter/exit; `synchronize()` opens a new epoch and blocks until
+    every op that started under an older epoch has drained.  Rebalance uses
+    it so a published move set / router swap is *seen* by all traffic
+    before the next phase relies on it.  Ops never block each other.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._epoch = 0
+        self._active: Dict[int, int] = {}
+
+    @contextlib.contextmanager
+    def op(self):
+        with self._cond:
+            epoch = self._epoch
+            self._active[epoch] = self._active.get(epoch, 0) + 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._active[epoch] -= 1
+                if self._active[epoch] == 0:
+                    del self._active[epoch]
+                    self._cond.notify_all()
+
+    def synchronize(self, timeout: float = 60.0) -> None:
+        with self._cond:
+            self._epoch += 1
+            fence = self._epoch
+            deadline = time.monotonic() + timeout
+            while any(e < fence and n > 0 for e, n in self._active.items()):
+                self._cond.wait(0.05)
+                # measured against the clock, not wakeup counts: notify_all
+                # fires on every op completion and would exhaust a counter
+                # in seconds under sustained traffic
+                if time.monotonic() >= deadline:
+                    raise TimeoutError("op gate synchronize timed out")
+
+
+def _move_dst(moves: Dict[int, Tuple[Move, ...]], r: int, m: int) -> Optional[int]:
+    """Destination node if (r, m) is currently migrating, else None."""
+    for start, stop, _, dst in moves.get(r, ()):
+        if start <= m < stop:
+            return dst
+    return None
 
 
 class ClusterStore:
@@ -51,12 +150,19 @@ class ClusterStore:
     forces serial fan-out, useful for deterministic profiling).
 
     ``cache_bytes`` attaches a hot-cuboid cache to every node (the budget
-    is split evenly across shards); ``write_behind`` attaches a per-node
+    is split evenly across the initial shards; nodes added later get the
+    same per-node budget); ``write_behind`` attaches a per-node
     write-behind ingest queue (``flush()`` is the durability barrier, see
     ``repro.cluster.cache``).  Both default to the ``REPRO_CACHE_BYTES`` /
     ``REPRO_WRITE_BEHIND`` environment knobs (the CI cache matrix leg runs
     tier-1 with them set), and neither overrides a tier the node factory
     already attached.
+
+    Elasticity: ``rebalance(target=n)`` / ``add_node()`` /
+    ``remove_node()`` re-partition by occupancy (``keys_per_node()`` is
+    the signal) and migrate keys live; see the module docstring for the
+    coherence protocol.  ``topology()`` is the introspection snapshot the
+    ``GET /topology`` verb serves.
     """
 
     def __init__(
@@ -70,36 +176,59 @@ class ClusterStore:
         write_behind_items: int = 512,
     ):
         self.spec = spec
-        self.router = Router(spec, n_nodes)
-        factory = node_factory or _default_node_factory
-        self.nodes: List[CuboidStore] = [factory(i, spec) for i in range(n_nodes)]
+        self._node_factory = node_factory or _default_node_factory
         if cache_bytes is None:
             cache_bytes = int(os.environ.get("REPRO_CACHE_BYTES", "0") or 0) or None
         if write_behind is None:
             write_behind = os.environ.get("REPRO_WRITE_BEHIND", "0") not in ("", "0")
-        if cache_bytes:
-            per_node = max(1, int(cache_bytes) // n_nodes)
-            for node in self.nodes:
-                if node.cache is None:
-                    attach_cache(node, per_node)
-        if write_behind:
-            for node in self.nodes:
-                if node.write_behind is None:
-                    enable_write_behind(node, max_items=write_behind_items)
+        self._node_cache_bytes = max(1, int(cache_bytes) // n_nodes) if cache_bytes else 0
+        self._write_behind = bool(write_behind)
+        self._write_behind_items = write_behind_items
+        nodes = tuple(self._build_node(i) for i in range(n_nodes))
+        self._topo = _Topology(nodes, Router(spec, n_nodes))
+        self._gate = _OpGate()
+        # Serializes whole rebalances; RLock so add/remove can nest into
+        # rebalance().
+        self._admin_lock = threading.RLock()
+        # Serializes the copy phase with double-writes to *moving* keys so
+        # a stale copy can never clobber a fresher concurrent write.
+        self._move_lock = threading.Lock()
+        # {resolution: ((start, stop, src, dst), ...)} — published
+        # atomically; empty outside an active migration.
+        self._moves: Dict[int, Tuple[Move, ...]] = {}
+        self._cfg_max_workers = max_workers
+        self._retired_pools: List[cf.ThreadPoolExecutor] = []
         workers = n_nodes if max_workers is None else max_workers
         if workers > 1:
             self._pool = cf.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="ocp-node")
         else:
             self._pool = None
 
+    def _build_node(self, i: int, factory: Optional[NodeFactory] = None) -> CuboidStore:
+        node = (factory or self._node_factory)(i, self.spec)
+        if self._node_cache_bytes and node.cache is None:
+            attach_cache(node, self._node_cache_bytes)
+        if self._write_behind and node.write_behind is None:
+            enable_write_behind(node, max_items=self._write_behind_items)
+        return node
+
     # -- cluster admin -----------------------------------------------------
     @property
+    def nodes(self) -> List[CuboidStore]:
+        """The current node shards (a snapshot copy — topology may move)."""
+        return list(self._topo.nodes)
+
+    @property
+    def router(self) -> Router:
+        return self._topo.router
+
+    @property
     def n_nodes(self) -> int:
-        return len(self.nodes)
+        return len(self._topo.nodes)
 
     @property
     def has_cache(self) -> bool:
-        return any(node.cache is not None for node in self.nodes)
+        return any(node.cache is not None for node in self._topo.nodes)
 
     def flush(self) -> int:
         """Durability barrier: drain every node's write-behind queue.
@@ -107,15 +236,20 @@ class ClusterStore:
         Returns the total number of pending writes applied.  When it
         returns, everything previously written through the cluster is in
         the node backends (the contract ``POST /flush`` exposes)."""
-        jobs = {i: self.nodes[i].flush for i in range(self.n_nodes)}
-        return sum(self._fan_out(jobs).values())
+        with self._gate.op():
+            nodes = self._topo.nodes
+            jobs = {i: nodes[i].flush for i in range(len(nodes))}
+            return sum(self._fan_out(jobs).values())
 
     def close(self) -> None:
-        for node in self.nodes:
+        for node in self._topo.nodes:
             node.close()  # flushes + stops per-node write-behind flushers
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        for pool in self._retired_pools:
+            pool.shutdown(wait=True)
+        self._retired_pools = []
 
     def __enter__(self):
         return self
@@ -125,28 +259,46 @@ class ClusterStore:
 
     def _fan_out(self, jobs: Dict[int, Callable[[], object]]) -> Dict[int, object]:
         """Run one job per touched node, in parallel when a pool exists."""
-        if self._pool is None or len(jobs) <= 1:
+        pool = self._pool
+        if pool is None or len(jobs) <= 1:
             return {n: job() for n, job in jobs.items()}
-        futures = {n: self._pool.submit(job) for n, job in jobs.items()}
+        futures = {n: pool.submit(job) for n, job in jobs.items()}
         return {n: f.result() for n, f in futures.items()}
 
     # -- single-cuboid ops (routed) ----------------------------------------
     def read_cuboid(self, r: int, m: int, channel: int = 0) -> np.ndarray:
-        return self.nodes[self.router.owner(r, m)].read_cuboid(r, m, channel)
+        with self._gate.op():
+            topo = self._topo
+            return topo.nodes[topo.router.owner(r, m)].read_cuboid(r, m, channel)
 
     def write_cuboid(self, r: int, m: int, data: np.ndarray, channel: int = 0) -> None:
-        self.nodes[self.router.owner(r, m)].write_cuboid(r, m, data, channel)
+        with self._gate.op():
+            topo = self._topo
+            owner = topo.router.owner(r, m)
+            dst = _move_dst(self._moves, r, m) if self._moves else None
+            if dst is None or dst == owner:
+                topo.nodes[owner].write_cuboid(r, m, data, channel)
+            else:
+                # double-write: the segment is migrating owner -> dst;
+                # serialize with the copier so it can't overwrite us.
+                with self._move_lock:
+                    topo.nodes[owner].write_cuboid(r, m, data, channel)
+                    topo.nodes[dst].write_cuboid(r, m, data, channel)
 
     def has_cuboid(self, r: int, m: int, channel: int = 0) -> bool:
-        return self.nodes[self.router.owner(r, m)].has_cuboid(r, m, channel)
+        with self._gate.op():
+            topo = self._topo
+            return topo.nodes[topo.router.owner(r, m)].has_cuboid(r, m, channel)
 
     # -- batch ops (routed + parallel) -------------------------------------
     def read_run(self, r: int, start: int, stop: int, channel: int = 0) -> List[np.ndarray]:
         """Run read in curve order, split at partition boundaries."""
-        out: List[np.ndarray] = []
-        for node, a, b in self.router.split_run(r, start, stop):
-            out.extend(self.nodes[node].read_run(r, a, b, channel))
-        return out
+        with self._gate.op():
+            topo = self._topo
+            out: List[np.ndarray] = []
+            for node, a, b in topo.router.split_run(r, start, stop):
+                out.extend(topo.nodes[node].read_run(r, a, b, channel))
+            return out
 
     def fetch_runs(
         self,
@@ -155,15 +307,17 @@ class ClusterStore:
         channel: int = 0,
     ) -> Dict[int, Optional[bytes]]:
         """Batch blob fetch: split runs by owner, fetch nodes in parallel."""
-        by_node = self.router.split_runs(r, list(runs))
-        jobs = {
-            node: functools.partial(self.nodes[node].fetch_runs, r, node_runs, channel)
-            for node, node_runs in by_node.items()
-        }
-        merged: Dict[int, Optional[bytes]] = {}
-        for part in self._fan_out(jobs).values():
-            merged.update(part)
-        return merged
+        with self._gate.op():
+            topo = self._topo
+            by_node = topo.router.split_runs(r, list(runs))
+            jobs = {
+                node: functools.partial(topo.nodes[node].fetch_runs, r, node_runs, channel)
+                for node, node_runs in by_node.items()
+            }
+            merged: Dict[int, Optional[bytes]] = {}
+            for part in self._fan_out(jobs).values():
+                merged.update(part)
+            return merged
 
     def fetch_blocks(
         self,
@@ -172,59 +326,422 @@ class ClusterStore:
         channel: int = 0,
     ) -> Dict[int, Optional[np.ndarray]]:
         """Decoded-cuboid batch fetch (cache fast path), fanned out per node."""
-        by_node = self.router.split_runs(r, list(runs))
-        jobs = {
-            node: functools.partial(self.nodes[node].fetch_blocks, r, node_runs, channel)
-            for node, node_runs in by_node.items()
-        }
-        merged: Dict[int, Optional[np.ndarray]] = {}
-        for part in self._fan_out(jobs).values():
-            merged.update(part)
-        return merged
+        with self._gate.op():
+            topo = self._topo
+            by_node = topo.router.split_runs(r, list(runs))
+            jobs = {
+                node: functools.partial(topo.nodes[node].fetch_blocks, r, node_runs, channel)
+                for node, node_runs in by_node.items()
+            }
+            merged: Dict[int, Optional[np.ndarray]] = {}
+            for part in self._fan_out(jobs).values():
+                merged.update(part)
+            return merged
 
     def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray], channel: int = 0) -> None:
-        """Batch write: group blocks by owner, write nodes in parallel."""
-        by_node: Dict[int, Dict[int, np.ndarray]] = {}
-        for m, data in blocks.items():
-            by_node.setdefault(self.router.owner(r, m), {})[m] = data
-        jobs = {
-            node: functools.partial(self.nodes[node].store_cuboids, r, node_blocks, channel)
-            for node, node_blocks in by_node.items()
+        """Batch write: group blocks by owner, write nodes in parallel.
+
+        Blocks inside a migrating segment are written to *both* the old
+        and the new owner (under the move lock), keeping the destination
+        complete before the boundary swap makes it authoritative.
+        """
+        with self._gate.op():
+            topo = self._topo
+            moves = self._moves.get(r, ()) if self._moves else ()
+            by_node: Dict[int, Dict[int, np.ndarray]] = {}
+            doubling: Dict[int, Dict[int, np.ndarray]] = {}
+            for m, data in blocks.items():
+                owner = topo.router.owner(r, m)
+                dst = None
+                if moves:
+                    dst = next((d for a, b, _, d in moves if a <= m < b), None)
+                if dst is not None and dst != owner:
+                    # migrating: double-write owner + dst under the move
+                    # lock (serialized with the copier)
+                    doubling.setdefault(owner, {})[m] = data
+                    doubling.setdefault(dst, {})[m] = data
+                else:
+                    by_node.setdefault(owner, {})[m] = data
+            if by_node:  # non-moving blocks never wait on the move lock
+                jobs = {
+                    node: functools.partial(
+                        topo.nodes[node].store_cuboids, r, node_blocks, channel
+                    )
+                    for node, node_blocks in by_node.items()
+                }
+                self._fan_out(jobs)
+            if doubling:
+                jobs = {
+                    node: functools.partial(
+                        topo.nodes[node].store_cuboids, r, node_blocks, channel
+                    )
+                    for node, node_blocks in doubling.items()
+                }
+                with self._move_lock:
+                    self._fan_out(jobs)
+
+    # -- elasticity (paper §6: dynamically redistribute data) ---------------
+    def topology(self) -> Dict[str, object]:
+        """Introspection snapshot served by ``GET /topology``."""
+        with self._gate.op():
+            topo = self._topo
+            return {
+                "n_nodes": len(topo.nodes),
+                "elastic": True,
+                "rebalancing": bool(self._moves),
+                "segments": {
+                    r: topo.router.segments(r) for r in range(self.spec.n_resolutions)
+                },
+                "keys_per_node": self._key_counts(topo),
+                "cache_nodes": sum(1 for n in topo.nodes if n.cache is not None),
+                "write_behind_nodes": sum(
+                    1 for n in topo.nodes if n.write_behind is not None
+                ),
+            }
+
+    def add_node(
+        self, node_factory: Optional[NodeFactory] = None, rebalance: bool = True
+    ) -> int:
+        """Grow the cluster by one shard; returns the new node's index.
+
+        With ``rebalance=True`` (default) keys migrate onto it immediately
+        (occupancy-balanced); otherwise it joins owning nothing until the
+        next ``rebalance()``.
+        """
+        with self._admin_lock:
+            index = self.n_nodes
+            if rebalance:
+                self.rebalance(target=index + 1, node_factory=node_factory)
+            else:
+                self._widen(index + 1, node_factory)
+            return index
+
+    def remove_node(self, node: int = -1) -> Dict[str, object]:
+        """Shrink the cluster: migrate ``node``'s keys off, then drop it."""
+        with self._admin_lock:
+            topo = self._topo
+            n = len(topo.nodes)
+            if n <= 1:
+                raise ValueError("cannot remove the last node")
+            idx = node if node >= 0 else n + node
+            if not (0 <= idx < n):
+                raise ValueError(f"node {node} out of range for {n} nodes")
+            t0 = time.perf_counter()
+            # Target: node idx owns nothing; the survivors re-cut by
+            # occupancy.  Built by inserting a zero-span segment at idx
+            # into the (n-1)-way balanced bounds.
+            occupancy = self._occupancy(topo)
+            target_parts: Dict[int, Partition] = {}
+            final_parts: Dict[int, Partition] = {}
+            for r in range(self.spec.n_resolutions):
+                survivors = Partition.balanced(
+                    occupancy.get(r, ()), topo.router.n_cells(r), n - 1
+                )
+                b = survivors.bounds
+                target_parts[r] = Partition(b[: idx + 1] + (b[idx],) + b[idx + 1 :])
+                final_parts[r] = survivors
+            moved_keys, moved_bytes = self._migrate_live(topo, target_parts)
+            # Drop the (now empty) node from the topology, then let every
+            # in-flight op drain before closing it.
+            kept = topo.nodes[:idx] + topo.nodes[idx + 1 :]
+            self._swap_topo(_Topology(kept, Router(self.spec, n - 1, final_parts)))
+            self._gate.synchronize()
+            topo.nodes[idx].close()
+            return {
+                "n_nodes": n - 1,
+                "removed": idx,
+                "moved_keys": moved_keys,
+                "moved_bytes": moved_bytes,
+                "seconds": time.perf_counter() - t0,
+            }
+
+    def rebalance(
+        self,
+        target: Optional[int] = None,
+        node_factory: Optional[NodeFactory] = None,
+        batch_keys: int = 64,
+    ) -> Dict[str, object]:
+        """Re-partition by occupancy and migrate keys live.
+
+        ``target`` is the desired node count (default: keep the current
+        one and only move boundaries).  Growth appends fresh shards first
+        (owning nothing), shrink drops the trailing shards after their
+        keys migrate off.  Returns migration stats; see the module
+        docstring for the coherence protocol.
+        """
+        with self._admin_lock:
+            t0 = time.perf_counter()
+            n_old = self.n_nodes
+            n_new = n_old if target is None else int(target)
+            if n_new <= 0:
+                raise ValueError("rebalance target must be positive")
+            if n_new > n_old:
+                self._widen(n_new, node_factory)
+            topo = self._topo
+            n_wide = len(topo.nodes)
+            occupancy = self._occupancy(topo)
+            target_parts: Dict[int, Partition] = {}
+            final_parts: Dict[int, Partition] = {}
+            for r in range(self.spec.n_resolutions):
+                n_cells = topo.router.n_cells(r)
+                part = Partition.balanced(occupancy.get(r, ()), n_cells, n_new)
+                final_parts[r] = part
+                if n_wide > n_new:  # shrinking: trailing shards own nothing
+                    part = Partition(part.bounds + (n_cells,) * (n_wide - n_new))
+                target_parts[r] = part
+            try:
+                moved_keys, moved_bytes = self._migrate_live(
+                    topo, target_parts, batch_keys=batch_keys
+                )
+            except BaseException:
+                if n_new > n_old:
+                    self._unwiden(n_old)
+                raise
+            if n_wide > n_new:
+                topo = self._topo
+                dropped = topo.nodes[n_new:]
+                self._swap_topo(
+                    _Topology(topo.nodes[:n_new], Router(self.spec, n_new, final_parts))
+                )
+                self._gate.synchronize()
+                for node in dropped:
+                    node.close()
+            return {
+                "n_nodes": n_new,
+                "moved_keys": moved_keys,
+                "moved_bytes": moved_bytes,
+                "seconds": time.perf_counter() - t0,
+            }
+
+    def _swap_topo(self, topo: _Topology) -> None:
+        self._topo = topo  # atomic reference swap; ops snapshot it once
+        if self._cfg_max_workers is not None:
+            return  # caller pinned the worker count; keep it
+        pool = self._pool
+        workers = getattr(pool, "_max_workers", 0) if pool is not None else 0
+        if len(topo.nodes) > max(workers, 1):
+            # Grow fan-out parallelism with the cluster.  The old pool is
+            # retired, not shut down: in-flight ops hold a reference and
+            # may still submit to it; close() reaps every generation.
+            if pool is not None:
+                self._retired_pools.append(pool)
+            self._pool = cf.ThreadPoolExecutor(
+                max_workers=len(topo.nodes), thread_name_prefix="ocp-node"
+            )
+
+    def _widen(self, n_new: int, node_factory: Optional[NodeFactory]) -> None:
+        """Append fresh shards that own nothing: every resolution's
+        partition is pinned to its current bounds (+ empty tail segments),
+        so ownership is unchanged until a migration moves it."""
+        topo = self._topo
+        n_old = len(topo.nodes)
+        nodes = list(topo.nodes)
+        for i in range(n_old, n_new):
+            nodes.append(self._build_node(i, node_factory))
+        pinned = {}
+        for r in range(self.spec.n_resolutions):
+            part = topo.router.partition(r)
+            pinned[r] = Partition(part.bounds + (part.n_cells,) * (n_new - n_old))
+        self._swap_topo(_Topology(tuple(nodes), Router(self.spec, n_new, pinned)))
+        self._gate.synchronize()  # all traffic now sees the widened topology
+
+    def _unwiden(self, n_old: int) -> None:
+        """Undo `_widen` after a failed grow-migration: drop the appended
+        shards again — but only while they still own nothing (the failed
+        migration never swapped ownership onto them; `_migrate_live`'s
+        rollback already wiped any blobs it landed there).  Without this,
+        every failed ``POST /rebalance`` would leak a set of phantom
+        nodes (threads, queues, caches) and misreport the cluster size."""
+        topo = self._topo
+        tail_segments = [
+            seg
+            for r in range(self.spec.n_resolutions)
+            for seg in topo.router.segments(r)[n_old:]
+        ]
+        if any(a != b for a, b in tail_segments):
+            return  # ownership already moved; the widened nodes must stay
+        dropped = topo.nodes[n_old:]
+        parts = {
+            r: Partition(topo.router.partition(r).bounds[: n_old + 1])
+            for r in range(self.spec.n_resolutions)
         }
-        self._fan_out(jobs)
+        self._swap_topo(_Topology(topo.nodes[:n_old], Router(self.spec, n_old, parts)))
+        self._gate.synchronize()
+        for node in dropped:
+            try:
+                node.close()
+            except Exception:
+                continue  # the original migration failure is re-raising
+
+    def _occupancy(self, topo: _Topology) -> Dict[int, List[int]]:
+        """{resolution: multiset of occupied cells} — the rebalance signal
+        (`keys_per_node()` is its per-node projection)."""
+        occupancy: Dict[int, List[int]] = {}
+        for node in topo.nodes:
+            for r, _c, m in node.stored_keys():
+                occupancy.setdefault(r, []).append(m)
+        return occupancy
+
+    def _migrate_live(
+        self,
+        topo: _Topology,
+        target_parts: Dict[int, Partition],
+        batch_keys: int = 64,
+    ) -> Tuple[int, int]:
+        """Move ownership from the current partitions to ``target_parts``
+        with zero lost or stale reads (the module-docstring protocol).
+        Returns (moved_keys, moved_bytes)."""
+        moves: Dict[int, Tuple[Move, ...]] = {}
+        for r, new_part in target_parts.items():
+            diff = tuple(topo.router.partition(r).moves(new_part))
+            if diff:
+                moves[r] = diff
+        if not moves:  # boundaries unchanged (or only empty ranges moved)
+            self._swap_topo(_Topology(topo.nodes, topo.router.with_partitions(target_parts)))
+            return 0, 0
+
+        # 1. register: publish the move set; once every in-flight op has
+        # drained, all writes to moving keys double-write.
+        self._moves = moves
+        moved_keys = moved_bytes = 0
+        swapped = False
+        try:
+            self._gate.synchronize()
+            src_nodes = {src for entries in moves.values() for _, _, src, _ in entries}
+            keys_by_src = {src: topo.nodes[src].stored_keys() for src in src_nodes}
+            # 2. copy: stream existing keys src -> dst in small batches
+            # under the move lock (serialized with double-writes so a
+            # stale copy can never overwrite a fresher concurrent write).
+            for r, entries in sorted(moves.items()):
+                for start, stop, src, dst in entries:
+                    by_channel: Dict[int, List[int]] = {}
+                    for kr, kc, km in keys_by_src[src]:
+                        if kr == r and start <= km < stop:
+                            by_channel.setdefault(kc, []).append(km)
+                    for c, ms in sorted(by_channel.items()):
+                        ms.sort()
+                        for i in range(0, len(ms), batch_keys):
+                            chunk = ms[i : i + batch_keys]
+                            with self._move_lock:
+                                blobs = topo.nodes[src].fetch_runs(
+                                    r, morton.indices_to_runs(chunk), c
+                                )
+                                items = [((r, c, m), blobs.get(m)) for m in chunk]
+                                topo.nodes[dst].ingest_blobs(items)
+                            moved_keys += len(items)
+                            moved_bytes += sum(len(b) for _, b in items if b)
+            # 3. swap: the new boundaries become authoritative.  The move
+            # set must stay published until every op that resolved owners
+            # under the OLD router has drained — such a writer still
+            # single-routes to the old owner and relies on the move entry
+            # to double-write; retiring the set first would let its write
+            # land on the old owner alone and be destroyed by cleanup.
+            self._swap_topo(_Topology(topo.nodes, topo.router.with_partitions(target_parts)))
+            swapped = True
+            self._gate.synchronize()
+        finally:
+            # 4. retire the move set, then drain writers that may still
+            # be double-writing before any key is deleted.
+            self._moves = {}
+            self._gate.synchronize()
+            if not swapped:
+                # A failed migration must not strand blobs on the
+                # destinations: the old boundaries stay authoritative, and
+                # anything landed on dst (copies *and* double-writes)
+                # would resurrect as stale data when a later rebalance
+                # re-assigns the range.  Under the old bounds dst owns
+                # nothing inside a moved range and reads never routed
+                # there, so wiping the range is invisible.
+                self._rollback_destinations(topo, moves)
+        # cleanup: every key in a moved range (including ones double-written
+        # during the move) leaves the old owner's backends and cache.
+        ranges_by_src: Dict[int, List[Tuple[int, int, int]]] = {}
+        for r, entries in moves.items():
+            for start, stop, src, _dst in entries:
+                ranges_by_src.setdefault(src, []).append((r, start, stop))
+        for src, ranges in ranges_by_src.items():
+            node = topo.nodes[src]
+            stale = [
+                k
+                for k in node.stored_keys()
+                if any(k[0] == r and a <= k[2] < b for r, a, b in ranges)
+            ]
+            if stale:
+                node.ingest_blobs([(k, None) for k in stale])
+                if node.cache is not None:
+                    node.cache.invalidate_many(stale)
+        return moved_keys, moved_bytes
+
+    @staticmethod
+    def _rollback_destinations(topo: _Topology, moves: Dict[int, Tuple[Move, ...]]) -> None:
+        """Best-effort: delete everything a failed migration landed on the
+        destination nodes (called after the move set is retired)."""
+        ranges_by_dst: Dict[int, List[Tuple[int, int, int]]] = {}
+        for r, entries in moves.items():
+            for start, stop, _src, dst in entries:
+                ranges_by_dst.setdefault(dst, []).append((r, start, stop))
+        for dst, ranges in ranges_by_dst.items():
+            node = topo.nodes[dst]
+            try:
+                stranded = [
+                    k
+                    for k in node.stored_keys()
+                    if any(k[0] == r and a <= k[2] < b for r, a, b in ranges)
+                ]
+                if stranded:
+                    node.ingest_blobs([(k, None) for k in stranded])
+                    if node.cache is not None:
+                        node.cache.invalidate_many(stranded)
+            except Exception:
+                continue  # the original migration failure is re-raising
 
     # -- maintenance / introspection ---------------------------------------
     def migrate(self) -> int:
         """Flush every node's write path into its read path (SSD→DB)."""
-        jobs = {i: self.nodes[i].migrate for i in range(self.n_nodes)}
-        return sum(self._fan_out(jobs).values())
+        with self._gate.op():
+            nodes = self._topo.nodes
+            jobs = {i: nodes[i].migrate for i in range(len(nodes))}
+            return sum(self._fan_out(jobs).values())
 
     def stored_keys(self) -> List[Key]:
-        keys: List[Key] = []
-        for node in self.nodes:
-            keys.extend(node.stored_keys())
-        return sorted(keys)
+        with self._gate.op():
+            keys: List[Key] = []
+            for node in self._topo.nodes:
+                keys.extend(node.stored_keys())
+            return sorted(keys)
 
     def storage_bytes(self) -> int:
-        return sum(node.storage_bytes() for node in self.nodes)
+        with self._gate.op():
+            return sum(node.storage_bytes() for node in self._topo.nodes)
 
     def keys_per_node(self) -> List[int]:
-        """Shard occupancy (the rebalancing signal for later PRs)."""
-        return [len(node.stored_keys()) for node in self.nodes]
+        """Shard occupancy — the rebalancing signal.
+
+        Counted without the flush barrier (pending write-behind writes
+        are folded in from a queue snapshot): a monitoring loop polling
+        occupancy must not keep draining the queues it is observing."""
+        with self._gate.op():
+            return self._key_counts(self._topo)
+
+    def _key_counts(self, topo: _Topology) -> List[int]:
+        nodes = topo.nodes
+        jobs = {i: nodes[i].key_count for i in range(len(nodes))}
+        counts = self._fan_out(jobs)
+        return [counts[i] for i in range(len(nodes))]
 
     @property
     def read_stats(self) -> PathStats:
         """Cluster-aggregate read-path stats (per-node stats on `nodes`)."""
-        return _sum_stats([n.read_stats for n in self.nodes])
+        return _sum_stats([n.read_stats for n in self._topo.nodes])
 
     @property
     def write_stats(self) -> PathStats:
-        return _sum_stats([n.write_stats for n in self.nodes])
+        return _sum_stats([n.write_stats for n in self._topo.nodes])
 
     def cache_counters(self) -> Dict[str, int]:
         """Aggregate hot-cuboid cache counters across node shards."""
         total: Dict[str, int] = {}
-        for node in self.nodes:
+        for node in self._topo.nodes:
             if node.cache is None:
                 continue
             for k, v in node.cache.counters().items():
@@ -234,7 +751,7 @@ class ClusterStore:
     def queue_counters(self) -> Dict[str, int]:
         """Aggregate write-behind queue counters across node shards."""
         total: Dict[str, int] = {}
-        for node in self.nodes:
+        for node in self._topo.nodes:
             if node.write_behind is None:
                 continue
             for k, v in node.write_behind.counters().items():

@@ -13,6 +13,7 @@ from typing import Dict, Iterable, List, Sequence, Set, Tuple
 
 import numpy as np
 
+from . import morton
 from .cuboid import CuboidGrid
 
 
@@ -46,13 +47,7 @@ class ObjectIndex:
 
     def runs(self, ann_id: int) -> List[Tuple[int, int]]:
         """Collapse the sorted cuboid list into contiguous morton runs."""
-        out: List[Tuple[int, int]] = []
-        for m in self.cuboids(ann_id):
-            if out and out[-1][1] == m:
-                out[-1] = (out[-1][0], m + 1)
-            else:
-                out.append((m, m + 1))
-        return out
+        return morton.indices_to_runs(self.cuboids(ann_id))
 
     def partitioned_runs(self, ann_id: int,
                          segments: Sequence[Tuple[int, int]]

@@ -557,6 +557,25 @@ class CuboidStore:
             self.write_stats.write_bytes += blob_bytes
             self.write_stats.time_s += time.perf_counter() - t0
 
+    def ingest_blobs(self, items: Sequence[Tuple[Key, Optional[bytes]]]) -> None:
+        """Land pre-compressed blobs on this store (``None`` = lazy-zero
+        delete) — the cluster's segment-migration entry point.
+
+        Blobs move between node shards without a decompress/re-compress
+        round trip, through the same single write order as normal writes
+        (write-behind queue when attached, then the cache), so a moved key
+        is readable here the moment this returns (read-your-writes).
+        """
+        if not items:
+            return
+        t0 = time.perf_counter()
+        self._apply_writes(list(items))
+        with self._stats_lock:
+            self.write_stats.writes += len(items)
+            self.write_stats.write_bytes += sum(
+                len(b) for _, b in items if b is not None)
+            self.write_stats.time_s += time.perf_counter() - t0
+
     def migrate(self) -> int:
         """Flush write path into the read path (paper: SSD→DB migration).
 
@@ -586,6 +605,19 @@ class CuboidStore:
         if self.write_backend is not None:
             keys |= set(self.write_backend.keys())
         return sorted(keys)
+
+    def key_count(self) -> int:
+        """Stored-key count *without* the flush barrier: pending
+        write-behind puts/deletes are folded in from a queue snapshot.
+        The cheap occupancy gauge topology polling wants — a monitoring
+        loop must not drain the write-behind queue it is observing."""
+        keys = set(self.read_backend.keys())
+        if self.write_backend is not None:
+            keys |= set(self.write_backend.keys())
+        if self.write_behind is not None:
+            puts, dels = self.write_behind.pending_keys()
+            keys = (keys | puts) - dels
+        return len(keys)
 
     def storage_bytes(self) -> int:
         total = 0

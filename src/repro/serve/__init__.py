@@ -2,9 +2,13 @@ from .serve_step import make_serve_step, make_prefill_step
 from .batcher import ContinuousBatcher, Request
 # The volume data-service verbs (paper §4.2) are served through the same
 # front door: stateless request-dict handlers over the data cluster, with
-# the hot-cuboid cache tier and write-behind ingest queue (paper §6)
-# available to every registered store.
+# the hot-cuboid cache tier, write-behind ingest queue, and the elastic
+# rebalancing verbs (GET /topology, POST /rebalance — paper §6) available
+# to every registered store.  HANDLERS is re-exported so HTTP shims can
+# enumerate every verb they need to route.
 from ..cluster import (
+    HANDLERS as VOLUME_HANDLERS,
+    ClusterStore,
     CuboidCache,
     VolumeService,
     WriteBehindQueue,
@@ -17,7 +21,9 @@ __all__ = [
     "ContinuousBatcher",
     "Request",
     "VolumeService",
+    "VOLUME_HANDLERS",
     "volume_dispatch",
+    "ClusterStore",
     "CuboidCache",
     "WriteBehindQueue",
 ]

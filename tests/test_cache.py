@@ -416,9 +416,16 @@ def test_flush_and_stats_verbs():
     stats = dispatch(svc, {"verb": "GET /stats", "dataset": "d"})
     assert stats["status"] == 200
     assert stats["read"]["cache_hits"] + stats["read"]["cache_misses"] > 0
+    # the coherence invariant must survive cluster-level aggregation
     assert stats["read"]["reads"] + stats["write"]["reads"] == (
         stats["read"]["cache_hits"] + stats["read"]["cache_misses"])
     assert stats["cache"]["hits"] >= 0 and stats["queue"]["depth"] == 0
+    # gauges aggregate as max, not sum: summing per-node peaks over-reports
+    # on multi-node clusters
+    assert stats["write"]["queue_peak"] == max(
+        n.write_stats.queue_peak for n in store.nodes)
+    assert stats["write"]["queue_peak"] < sum(
+        max(n.write_stats.queue_peak, 1) for n in store.nodes)
     assert dispatch(svc, {"verb": "GET /stats",
                           "dataset": "nope"})["status"] == 404
 

@@ -217,6 +217,30 @@ def test_cutout_verb_zlib_encoding(service):
     np.testing.assert_array_equal(vol, want)
 
 
+def test_put_cutout_verb_zlib_payload(service):
+    """Regression: zlib-encoded PUT payloads decode via np.frombuffer to
+    read-only arrays; the write path must receive a writable block (any
+    in-place normalize/pad raised 'assignment destination is read-only')."""
+    from repro.cluster.handlers import _decode_volume
+
+    data = np.random.default_rng(13).integers(1, 255, (8, 8, 4), np.uint8)
+    req = {"verb": "PUT /cutout", "dataset": "kasthuri11",
+           "lo": (32, 32, 16), "encode": "zlib",
+           "data": zlib.compress(data.tobytes(), 1),
+           "dtype": "uint8", "shape": (8, 8, 4)}
+    decoded = _decode_volume(req)
+    assert decoded.flags.writeable  # the historical failure mode
+    decoded[0, 0, 0] = decoded[0, 0, 0]  # in-place write must not raise
+    put = dispatch(service, req)
+    assert put["status"] == 200 and put["written_shape"] == (8, 8, 4)
+    got = dispatch(service, {"verb": "GET /cutout", "dataset": "kasthuri11",
+                             "lo": (32, 32, 16), "hi": (40, 40, 20)})
+    np.testing.assert_array_equal(got["data"], data)
+    # corrupt zlib payload is a 400, never an exception
+    bad = dispatch(service, {**req, "data": b"not zlib"})
+    assert bad["status"] == 400
+
+
 def test_annotation_verbs(service):
     bbox = dispatch(service, {"verb": "GET /objects/boundingbox",
                               "project": "anno", "id": service.ann_id})

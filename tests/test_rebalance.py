@@ -1,0 +1,525 @@
+"""Elastic rebalancing: movable partitions, live segment migration, and
+the router edge cases rebalancing exercises hardest.
+
+The contract under test (paper §6 "dynamically redistribute data"): a
+`ClusterStore` may grow, shrink, and re-cut its curve partitions at any
+time — including *while* cutout reads and writes are in flight — and stay
+bit-identical to an uncached single `CuboidStore` reference throughout.
+Moved keys must land on their new owners per `Router.segments`, and the
+old owners must end up clean (backends and caches).
+
+Also here: the tiny-grid regression tests for `Partition.owner`/`split`
+(empty curve segments — `n_nodes > n_cells` and rebalanced mid-list empty
+segments used to mis-assign owners or walk off the segment list).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.cluster import ClusterStore, Partition, Router, VolumeService, dispatch
+from repro.core import morton
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest, write_cutout
+from repro.core.store import CuboidStore
+
+SHAPE = (32, 32, 16)
+CUBOID = (8, 8, 4)
+N_CELLS = 64  # 4x4x4 grid
+
+
+def spec(shape=SHAPE, **kw):
+    return DatasetSpec(name="rb", volume_shape=shape, dtype="uint8",
+                       base_cuboid=CUBOID, **kw)
+
+
+def volume(seed=0, shape=SHAPE):
+    return np.random.default_rng(seed).integers(
+        1, 255, size=shape, dtype=np.uint8)
+
+
+def rand_box(rng, shape=SHAPE):
+    lo = [int(rng.integers(0, s - 1)) for s in shape]
+    hi = [int(rng.integers(l + 1, s + 1)) for l, s in zip(lo, shape)]
+    return lo, hi
+
+
+# ------------------------------------------------ partition / router edges --
+
+
+def test_owner_of_matches_partition_curve_brute_force():
+    """owner_of == the segment list, including n_parts > n_cells (the old
+    ``idx // max(base, 1)`` arithmetic had base == 0 there)."""
+    for n_cells in range(1, 18):
+        for n_parts in range(1, 12):
+            parts = morton.partition_curve(n_cells, n_parts)
+            for idx in range(n_cells):
+                want = next(i for i, (a, b) in enumerate(parts) if a <= idx < b)
+                assert int(morton.owner_of(idx, n_cells, n_parts)) == want
+            got = morton.owner_of(np.arange(n_cells), n_cells, n_parts)
+            want = [next(i for i, (a, b) in enumerate(parts) if a <= x < b)
+                    for x in range(n_cells)]
+            np.testing.assert_array_equal(got, want)
+
+
+def test_partition_skips_empty_segments():
+    """Empty segments anywhere in the boundary list (what occupancy-based
+    rebalancing produces) never own cells and never break split()."""
+    part = Partition((0, 0, 2, 2, 4, 4))  # parts 0, 2, 4 empty
+    assert part.owner(0) == 1 and part.owner(1) == 1
+    assert part.owner(2) == 3 and part.owner(3) == 3
+    assert part.split(0, 4) == [(1, 0, 2), (3, 2, 4)]
+    # no zero-length pieces, ever
+    for start in range(4):
+        for stop in range(start, 5):
+            pieces = part.split(start, stop)
+            assert all(a < b for _, a, b in pieces)
+            assert [m for _, a, b in pieces for m in range(a, b)] == \
+                list(range(start, stop))
+
+
+def test_partition_validation_and_constructors():
+    with pytest.raises(ValueError):
+        Partition((1, 4))        # must start at 0
+    with pytest.raises(ValueError):
+        Partition((0, 3, 2))     # must be non-decreasing
+    with pytest.raises(ValueError):
+        Partition((0,))          # needs one segment
+    part = Partition.from_segments([(0, 2), (2, 2), (2, 4)])
+    assert part.bounds == (0, 2, 2, 4)
+    with pytest.raises(ValueError):
+        Partition.from_segments([(0, 2), (3, 4)])  # gap
+    with pytest.raises(ValueError):
+        part.owner(4)            # out of range
+    assert Partition.even(4, 8).segments()[:4] == [(0, 1), (1, 2), (2, 3), (3, 4)]
+
+
+def test_partition_balanced_and_moves():
+    # skewed occupancy: all keys in the first quarter of the curve
+    cells = [0, 1, 1, 2, 3, 3, 3, 4]
+    part = Partition.balanced(cells, 64, 4)
+    assert part.n_parts == 4 and part.n_cells == 64
+    counts = [sum(1 for c in cells if a <= c < b) for a, b in part.segments()]
+    assert max(counts) - min(counts) <= 2  # roughly equal keys per part
+    # empty occupancy falls back to the even split
+    assert Partition.balanced([], 64, 4).bounds == Partition.even(64, 4).bounds
+    # moves() diffs owners over every boundary-crossing range
+    old, new = Partition((0, 32, 64)), Partition((0, 16, 64))
+    assert old.moves(new) == [(16, 32, 0, 1)]
+    assert new.moves(old) == [(16, 32, 1, 0)]
+    assert old.moves(old) == []
+    with pytest.raises(ValueError):
+        old.moves(Partition((0, 8)))  # different curves
+
+
+@pytest.mark.parametrize("n_nodes", [3, 5, 9])
+def test_router_tiny_grid_more_nodes_than_cells(n_nodes):
+    """Tiny grids at coarse resolutions: n_nodes > n_cells leaves most
+    nodes owning nothing; routing must stay total and exact."""
+    tiny = spec(shape=CUBOID)  # single cuboid -> n_cells == 1
+    router = Router(tiny, n_nodes)
+    assert router.n_cells(0) == 1
+    assert router.owner(0, 0) == 0
+    assert router.split_run(0, 0, 1) == [(0, 0, 1)]
+    assert sum(b - a for a, b in router.segments(0)) == 1
+    cluster = ClusterStore(tiny, n_nodes=n_nodes)
+    vol = volume(seed=2, shape=CUBOID)
+    ingest(cluster, 0, vol)
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), CUBOID), vol)
+    assert sum(cluster.keys_per_node()) == 1
+    cluster.close()
+
+
+def test_router_with_explicit_partitions_covers_all_runs():
+    """A Router holding rebalanced (empty-mid-segment) partitions splits
+    every run exactly — the regression the old ``node += 1`` walk failed."""
+    router = Router(spec(), 3, {0: Partition((0, 10, 10, 64))})
+    n = router.n_cells(0)
+    for start in range(0, n, 7):
+        for stop in range(start + 1, n + 1, 11):
+            pieces = router.split_run(0, start, stop)
+            assert all(a < b for _, a, b in pieces)
+            assert [m for _, a, b in pieces for m in range(a, b)] == \
+                list(range(start, stop))
+            for node, a, b in pieces:
+                seg_lo, seg_hi = router.segments(0)[node]
+                assert seg_lo <= a < b <= seg_hi
+    with pytest.raises(ValueError):
+        Router(spec(), 2, {0: Partition((0, 10, 10, 64))})  # 3 parts, 2 nodes
+
+
+# ------------------------------------------------------- elasticity basics --
+
+
+def test_rebalance_grow_moves_keys_to_new_owners():
+    vol = volume()
+    ref = CuboidStore(spec())
+    ingest(ref, 0, vol)
+    cluster = ClusterStore(spec(), n_nodes=2)
+    ingest(cluster, 0, vol)
+    before = cluster.keys_per_node()
+    stats = cluster.rebalance(target=4)
+    assert stats["n_nodes"] == 4 and stats["moved_keys"] > 0
+    after = cluster.keys_per_node()
+    assert len(after) == 4 and sum(after) == sum(before)
+    assert max(after) - min(after) <= 1  # occupancy-balanced
+    # every stored key sits on the node Router.segments assigns it to
+    for r, c, m in cluster.stored_keys():
+        owner = cluster.router.owner(r, m)
+        assert cluster.nodes[owner].has_cuboid(r, m, c)
+        for i, node in enumerate(cluster.nodes):
+            if i != owner:
+                assert not node.has_cuboid(r, m, c)
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE),
+                                  cutout(ref, 0, (0, 0, 0), SHAPE))
+    assert cluster.stored_keys() == ref.stored_keys()
+    cluster.close()
+
+
+def test_add_and_remove_node_roundtrip():
+    vol = volume(seed=5)
+    cluster = ClusterStore(spec(), n_nodes=2)
+    ingest(cluster, 0, vol)
+    idx = cluster.add_node()
+    assert idx == 2 and cluster.n_nodes == 3
+    assert min(cluster.keys_per_node()) > 0  # the new node took keys
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE), vol)
+    stats = cluster.remove_node(1)  # a *middle* node
+    assert stats["n_nodes"] == 2 and cluster.n_nodes == 2
+    assert sum(cluster.keys_per_node()) == N_CELLS
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE), vol)
+    with pytest.raises(ValueError):
+        cluster.remove_node(7)
+    cluster.remove_node()
+    with pytest.raises(ValueError):
+        cluster.remove_node()  # cannot drop the last node
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE), vol)
+    cluster.close()
+
+
+def test_rebalance_after_skewed_writes_balances_occupancy():
+    """Write only one spatial corner, then rebalance: boundary cuts follow
+    the keys, not the raw curve (occupancy, not geometry)."""
+    cluster = ClusterStore(spec(), n_nodes=4)
+    corner = volume(seed=6)[:16, :16, :8]
+    write_cutout(cluster, 0, (0, 0, 0), corner)
+    skewed = cluster.keys_per_node()
+    cluster.rebalance()
+    balanced = cluster.keys_per_node()
+    assert sum(balanced) == sum(skewed)
+    assert max(balanced) - min(balanced) <= max(skewed) - min(skewed)
+    assert max(balanced) - min(balanced) <= 1
+    np.testing.assert_array_equal(
+        cutout(cluster, 0, (0, 0, 0), (16, 16, 8)), corner)
+    cluster.close()
+
+
+def test_rebalance_updates_partition_for_every_resolution():
+    multi = spec(shape=(64, 64, 16), n_resolutions=2)
+    cluster = ClusterStore(multi, n_nodes=2)
+    vols = {r: volume(seed=r, shape=tuple(multi.grid(r).volume_shape))
+            for r in range(2)}
+    for r, vol in vols.items():
+        ingest(cluster, r, vol)
+    cluster.rebalance(target=3)
+    assert cluster.router.partition(0).n_parts == 3
+    assert cluster.router.partition(1).n_parts == 3
+    for r, vol in vols.items():
+        got = cutout(cluster, r, (0, 0, 0), tuple(multi.grid(r).volume_shape))
+        np.testing.assert_array_equal(got, vol)
+        for key_r, c, m in cluster.stored_keys():
+            if key_r == r:
+                assert cluster.nodes[cluster.router.owner(r, m)].has_cuboid(r, m, c)
+    cluster.close()
+
+
+# ------------------------------------------- coherence under interleavings --
+
+
+def apply_op(store, op):
+    kind = op[0]
+    if kind == "read_cuboid":
+        return store.read_cuboid(0, op[1])
+    if kind == "write_cuboid":
+        store.write_cuboid(0, op[1], op[2])
+        return None
+    if kind == "cutout":
+        return cutout(store, 0, op[1], op[2])
+    if kind == "write_cutout":
+        write_cutout(store, 0, op[1], op[2])
+        return None
+    if kind == "migrate":
+        store.migrate()
+        return None
+    if kind == "flush":
+        if hasattr(store, "flush"):
+            store.flush()
+        return None
+    if kind == "rebalance":
+        # subject-only: the reference store is not elastic
+        if isinstance(store, ClusterStore):
+            store.rebalance(target=op[1])
+        return None
+    raise AssertionError(f"unknown op {kind}")
+
+
+def random_ops(rng, n_ops):
+    """Random interleaving including topology changes (1->2->4->3 style)."""
+    ops = []
+    targets = rng.permutation([1, 2, 3, 4]).tolist()
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.18:
+            ops.append(("read_cuboid", int(rng.integers(0, N_CELLS))))
+        elif roll < 0.36:
+            data = rng.integers(0, 4, size=CUBOID).astype(np.uint8)
+            if rng.random() < 0.2:
+                data[:] = 0  # lazy-zero delete path
+            ops.append(("write_cuboid", int(rng.integers(0, N_CELLS)), data))
+        elif roll < 0.54:
+            ops.append(("cutout", *rand_box(rng)))
+        elif roll < 0.72:
+            lo, hi = rand_box(rng)
+            shape = [h - l for l, h in zip(lo, hi)]
+            data = rng.integers(0, 255, size=shape).astype(np.uint8)
+            ops.append(("write_cutout", lo, data))
+        elif roll < 0.80:
+            ops.append(("migrate",))
+        elif roll < 0.86:
+            ops.append(("flush",))
+        else:
+            target = targets[int(rng.integers(0, len(targets)))]
+            ops.append(("rebalance", target))
+    return ops
+
+
+def run_interleaving(n_nodes, ops, **cluster_kw):
+    ref = CuboidStore(spec())
+    sub = ClusterStore(spec(), n_nodes=n_nodes, **cluster_kw)
+    try:
+        for op in ops:
+            want = apply_op(ref, op)
+            got = apply_op(sub, op)
+            if want is not None:
+                np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(
+            cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+        sub.flush()
+        assert sub.stored_keys() == ref.stored_keys()
+        for r, c, m in sub.stored_keys():
+            assert sub.nodes[sub.router.owner(r, m)].has_cuboid(r, m, c)
+        if sub.has_cache:  # every read is a cache hit or a cache miss
+            rs, ws = sub.read_stats, sub.write_stats
+            assert rs.reads + ws.reads == rs.cache_hits + rs.cache_misses
+    finally:
+        sub.close()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_rebalancing_cluster_matches_reference(seed):
+    """1->2->4->3-style topology walks interleaved with reads, writes,
+    flushes, and migrations: bit-identical to the uncached reference.
+    Runs under whatever REPRO_CACHE_BYTES / REPRO_WRITE_BEHIND the
+    environment sets (the CI cached matrix leg covers the tiered case)."""
+    rng = np.random.default_rng(seed * 13 + 1)
+    ops = [("write_cutout", [0, 0, 0], volume(seed=seed))]
+    ops += random_ops(rng, 50)
+    ops += [("rebalance", 2), ("rebalance", 4), ("rebalance", 3)]
+    run_interleaving(1, ops)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_rebalancing_cluster_matches_reference_tiered(seed):
+    """Same walk with the cache + write-behind tiers forced on and an
+    eviction-heavy budget (coherence must survive all three tiers)."""
+    rng = np.random.default_rng(seed * 7 + 3)
+    ops = [("write_cutout", [0, 0, 0], volume(seed=seed + 10))]
+    ops += random_ops(rng, 40)
+    ops += [("rebalance", 2), ("rebalance", 4), ("rebalance", 3)]
+    run_interleaving(1, ops, cache_bytes=6 << 10, write_behind=True,
+                     write_behind_items=16)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+           st.sampled_from([1, 2, 4]),
+           st.integers(min_value=5, max_value=30))
+    @settings(max_examples=15, deadline=None)
+    def test_rebalance_coherence_property(seed, n_nodes, n_ops):
+        rng = np.random.default_rng(seed)
+        run_interleaving(n_nodes, random_ops(rng, n_ops))
+
+
+# ------------------------------------------------- live migration coherence --
+
+
+def test_live_rebalance_under_concurrent_traffic():
+    """The acceptance scenario: a 2->4 rebalance completes while reader
+    and writer threads hammer the cluster; every read observed *during*
+    the move is bit-identical to the reference, and afterwards all keys
+    sit on their new owners with nothing lost or stale."""
+    base = volume(seed=11)
+    sub = ClusterStore(spec(), n_nodes=2, cache_bytes=32 << 10,
+                       write_behind=True, write_behind_items=32)
+    ingest(sub, 0, base)  # channel 0: read-only shared ground truth
+    n_writers, n_rounds = 3, 6
+    refs = {t: CuboidStore(spec()) for t in range(n_writers)}
+    failures = []
+    stop = threading.Event()
+
+    def reader(tid):
+        rng = np.random.default_rng(500 + tid)
+        try:
+            while not stop.is_set():
+                lo, hi = rand_box(rng)
+                got = cutout(sub, 0, lo, hi)
+                sl = tuple(slice(l, h) for l, h in zip(lo, hi))
+                np.testing.assert_array_equal(got, base[sl])
+        except Exception as e:  # pragma: no cover - surfaced via failures
+            failures.append(("reader", tid, e))
+
+    def writer(tid):
+        rng = np.random.default_rng(900 + tid)
+        ch = tid + 1  # each writer owns a channel
+        try:
+            for _ in range(n_rounds):
+                lo, hi = rand_box(rng)
+                shape = [h - l for l, h in zip(lo, hi)]
+                data = rng.integers(1, 255, size=shape).astype(np.uint8)
+                write_cutout(sub, 0, lo, data, channel=ch)
+                write_cutout(refs[tid], 0, lo, data, channel=ch)
+        except Exception as e:  # pragma: no cover
+            failures.append(("writer", tid, e))
+
+    readers = [threading.Thread(target=reader, args=(t,)) for t in range(2)]
+    writers = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_writers)]
+    for t in readers + writers:
+        t.start()
+    try:
+        stats = sub.rebalance(target=4)
+        assert stats["n_nodes"] == 4 and stats["moved_keys"] > 0
+        # keep the boundaries moving while traffic is still in flight
+        for target in (2, 3, 4):
+            sub.rebalance(target=target)
+        for t in writers:
+            t.join(timeout=60)
+            assert not t.is_alive(), "writer deadlocked"
+    finally:
+        stop.set()
+        for t in readers:
+            t.join(timeout=60)
+    assert not [f for f in readers if f.is_alive()]
+    assert not failures, failures
+    sub.flush()
+    # nothing lost: every writer channel equals its serial replay
+    for tid in range(n_writers):
+        np.testing.assert_array_equal(
+            cutout(sub, 0, (0, 0, 0), SHAPE, channel=tid + 1),
+            cutout(refs[tid], 0, (0, 0, 0), SHAPE, channel=tid + 1))
+    # nothing stale: shared channel still the untouched ground truth
+    np.testing.assert_array_equal(cutout(sub, 0, (0, 0, 0), SHAPE), base)
+    # every key on its post-move owner, and only there
+    assert sub.n_nodes == 4
+    for r, c, m in sub.stored_keys():
+        owner = sub.router.owner(r, m)
+        assert sub.nodes[owner].has_cuboid(r, m, c)
+        for i, node in enumerate(sub.nodes):
+            if i != owner:
+                assert not node.has_cuboid(r, m, c)
+    rs, ws = sub.read_stats, sub.write_stats
+    assert rs.reads + ws.reads == rs.cache_hits + rs.cache_misses
+    sub.close()
+
+
+def test_failed_migration_rolls_back_clean():
+    """A migration that dies mid-copy must not strand blobs on the
+    destinations or leave the move set published: ownership stays on the
+    old boundaries, the cluster remains consistent, and a retry works."""
+    vol = volume(seed=21)
+    cluster = ClusterStore(spec(), n_nodes=2)
+    ingest(cluster, 0, vol)
+
+    victim = cluster.nodes[0]
+    real_fetch = victim.fetch_runs
+
+    def failing_fetch(*a, **kw):
+        raise RuntimeError("node lost mid-copy")
+
+    victim.fetch_runs = failing_fetch
+    try:
+        with pytest.raises(RuntimeError, match="mid-copy"):
+            cluster.rebalance(target=4)
+    finally:
+        victim.fetch_runs = real_fetch
+    # move set retired, the widened shards dropped again (no phantom
+    # nodes leaked per failed attempt), nothing stranded off-owner
+    assert cluster.n_nodes == 2
+    assert not cluster.topology()["rebalancing"]
+    for r, c, m in cluster.stored_keys():
+        owner = cluster.router.owner(r, m)
+        assert cluster.nodes[owner].has_cuboid(r, m, c)
+        for i, node in enumerate(cluster.nodes):
+            if i != owner:
+                assert not node.has_cuboid(r, m, c)
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE), vol)
+    # the retry completes and balances
+    stats = cluster.rebalance(target=4)
+    assert stats["n_nodes"] == 4
+    after = cluster.keys_per_node()
+    assert max(after) - min(after) <= 1 and sum(after) == N_CELLS
+    np.testing.assert_array_equal(cutout(cluster, 0, (0, 0, 0), SHAPE), vol)
+    cluster.close()
+
+
+# ------------------------------------------------------------ service verbs --
+
+
+@pytest.fixture
+def service():
+    svc = VolumeService()
+    store = ClusterStore(spec(), n_nodes=2)
+    ingest(store, 0, volume())
+    svc.add_dataset("d", store)
+    svc.add_dataset("single", CuboidStore(spec()))
+    return svc
+
+
+def test_topology_verb(service):
+    topo = dispatch(service, {"verb": "GET /topology", "dataset": "d"})
+    assert topo["status"] == 200 and topo["elastic"]
+    assert topo["n_nodes"] == 2 and not topo["rebalancing"]
+    assert sum(topo["keys_per_node"]) == N_CELLS
+    segs = topo["segments"][0]
+    assert len(segs) == 2 and segs[0][0] == 0 and segs[-1][1] == N_CELLS
+    single = dispatch(service, {"verb": "GET /topology", "dataset": "single"})
+    assert single["status"] == 200 and not single["elastic"]
+    assert single["n_nodes"] == 1
+    assert dispatch(service, {"verb": "GET /topology",
+                              "dataset": "nope"})["status"] == 404
+
+
+def test_rebalance_verb(service):
+    store = service.datasets["d"]
+    want = cutout(store, 0, (3, 5, 1), (31, 29, 15))
+    resp = dispatch(service, {"verb": "POST /rebalance", "dataset": "d",
+                              "target": 4})
+    assert resp["status"] == 200
+    assert resp["topology"]["n_nodes"] == 4 and resp["moved_keys"] > 0
+    np.testing.assert_array_equal(
+        cutout(store, 0, (3, 5, 1), (31, 29, 15)), want)
+    # boundary-only rebalance (no target) is a 200 too
+    assert dispatch(service, {"verb": "POST /rebalance",
+                              "dataset": "d"})["status"] == 200
+    assert dispatch(service, {"verb": "POST /rebalance",
+                              "dataset": "nope"})["status"] == 404
+    assert dispatch(service, {"verb": "POST /rebalance", "dataset": "d",
+                              "target": 0})["status"] == 400
+    assert dispatch(service, {"verb": "POST /rebalance", "dataset": "d",
+                              "target": "many"})["status"] == 400
+    assert dispatch(service, {"verb": "POST /rebalance",
+                              "dataset": "single"})["status"] == 400
+    store.close()
