@@ -53,7 +53,8 @@ def main(argv=None) -> None:
     if args.preset:
         os.environ["BENCH_PRESET"] = args.preset
 
-    from . import cache_bench, cluster_bench, figs, kernels_bench, rebalance_bench
+    from . import (cache_bench, cluster_bench, coldread_bench, figs,
+                   kernels_bench, rebalance_bench)
 
     sections = [
         ("fig10", figs.fig10_cutout_throughput),
@@ -62,6 +63,7 @@ def main(argv=None) -> None:
         ("fig13", figs.fig13_write_paths),
         ("cluster", cluster_bench.rows),
         ("cache", cache_bench.rows),
+        ("coldread", coldread_bench.rows),
         ("rebalance", rebalance_bench.rows),
         ("curves", kernels_bench.curve_panel_traffic),
         ("attn", kernels_bench.attention_paths),

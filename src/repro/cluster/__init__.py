@@ -4,6 +4,7 @@ rebalancing with segment migration, the hot-cuboid cache tier +
 write-behind ingest queue, and the RESTful-style service verbs over
 them."""
 
+from ..core.store import DecodePolicy
 from .cache import (
     CuboidCache,
     WriteBehindQueue,
@@ -31,6 +32,7 @@ __all__ = [
     "ClusterStore",
     "Router",
     "Partition",
+    "DecodePolicy",
     "CuboidCache",
     "WriteBehindQueue",
     "attach_cache",

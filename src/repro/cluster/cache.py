@@ -13,7 +13,11 @@ a `ClusterStore` shard) attaches:
   finds the entire neighbourhood resident or absent together.  A byte
   budget bounds resident blob + block bytes.  Absence is cached too
   (``blob is None`` entries), so a fully warm cutout performs zero backend
-  I/O even over lazily-allocated volumes.
+  I/O even over lazily-allocated volumes.  The cache is also the landing
+  zone for the cold path's plan-driven segment prefetcher
+  (``put_prefetched``): prefetched blobs are admitted only into spare
+  budget and queue at the LRU end until a real read touches them, so one
+  giant scan's lookahead can never evict the hot set.
 
 * :class:`WriteBehindQueue` — a bounded per-node queue that absorbs cuboid
   writes and applies them to the backing store from a background flusher
@@ -100,6 +104,10 @@ class CuboidCache:
     Thread-safe; all counters are monotonic except ``bytes``.
     """
 
+    # Per-entry accounting overhead, exposed so the store's prefetch
+    # admission precheck stays in sync with put_prefetched's arithmetic.
+    entry_overhead = ENTRY_OVERHEAD
+
     def __init__(self, max_bytes: int = 64 << 20, segment_bits: int = 3):
         if max_bytes <= 0:
             raise ValueError("max_bytes must be positive")
@@ -114,6 +122,12 @@ class CuboidCache:
         self.misses = 0
         self.evictions = 0  # segments dropped
         self.insertions = 0
+        # Prefetch admission bookkeeping: which resident keys arrived via
+        # put_prefetched and have not been touched by a real read yet.
+        self._prefetched: set = set()
+        self.prefetch_insertions = 0
+        self.prefetch_hits = 0      # reads served by a prefetched entry
+        self.prefetch_rejected = 0  # admissions refused (budget guard)
 
     # -- internals ---------------------------------------------------------
     def _seg_key(self, key: Key) -> SegKey:
@@ -132,6 +146,8 @@ class CuboidCache:
             _, seg = self._segments.popitem(last=False)
             self.bytes -= seg.nbytes
             self.evictions += 1
+            if self._prefetched:
+                self._prefetched.difference_update(seg.entries)
 
     def _store(self, key: Key, entry: _Entry) -> None:
         sk = self._seg_key(key)
@@ -148,6 +164,7 @@ class CuboidCache:
         seg.nbytes += entry.nbytes
         self.bytes += entry.nbytes
         self.insertions += 1
+        self._prefetched.discard(key)  # a real write/read supersedes it
         self._evict_to_budget()
 
     # -- lookups -----------------------------------------------------------
@@ -161,7 +178,15 @@ class CuboidCache:
                 self.misses += 1
                 return False, None
             self.hits += 1
+            self._count_prefetch_hit(key)
             return True, entry.blob
+
+    def _count_prefetch_hit(self, key: Key) -> None:
+        """Called under the lock on every hit: a prefetched entry's first
+        real read counts once and promotes it to a normal resident."""
+        if key in self._prefetched:
+            self._prefetched.discard(key)
+            self.prefetch_hits += 1
 
     def probe(self, key: Key) -> Tuple[bool, Optional[bytes]]:
         """`get_blob` without touching the hit/miss counters or the LRU —
@@ -173,20 +198,55 @@ class CuboidCache:
                 return False, None
             return True, entry.blob
 
-    def get_block(self, key: Key, shape, dtype) -> Tuple[bool, Optional[np.ndarray]]:
-        """Blob lookup that also memoizes the decoded block on first use.
+    def peek_block(self, key: Key) -> Tuple[bool, Optional[bytes], Optional[np.ndarray]]:
+        """Hit lookup returning ``(hit, blob, block)`` WITHOUT decoding.
 
-        Returned arrays are read-only views owned by the cache — callers
-        copy before mutating (the cutout engine only assembles from them).
+        The pipelined cold path uses this instead of :meth:`get_block` so
+        blob-only hits (e.g. freshly prefetched segments) can decompress
+        in parallel chunks on the decode pool rather than one-by-one in
+        the calling thread; callers memoize the result via
+        :meth:`attach_block`.  Counts as a normal read (hit/miss + LRU
+        touch).
         """
         with self._lock:
             seg = self._touch(self._seg_key(key))
             entry = seg.entries.get(key) if seg is not None else None
             if entry is None:
                 self.misses += 1
-                return False, None
+                return False, None, None
             self.hits += 1
-            blob, block = entry.blob, entry.block
+            self._count_prefetch_hit(key)
+            return True, entry.blob, entry.block
+
+    def attach_block(self, key: Key, blob: bytes, block: np.ndarray) -> None:
+        """Memoize a block decoded *outside* the cache (decode workers).
+
+        Same guard as :meth:`get_block`'s lazy memoization: attach only if
+        the entry still holds the identical blob and no block — a racing
+        write or eviction silently drops the memo.  Marks ``block``
+        read-only (it becomes cache-owned and shared)."""
+        block.flags.writeable = False
+        with self._lock:
+            seg = self._segments.get(self._seg_key(key))
+            entry = seg.entries.get(key) if seg is not None else None
+            if entry is not None and entry.blob is blob and entry.block is None:
+                entry.block = block
+                seg.nbytes += block.nbytes
+                self.bytes += block.nbytes
+                self._evict_to_budget()
+
+    def get_block(self, key: Key, shape, dtype) -> Tuple[bool, Optional[np.ndarray]]:
+        """Blob lookup that also memoizes the decoded block on first use.
+
+        Returned arrays are read-only views owned by the cache — callers
+        copy before mutating.  The cutout engine's pipelined path uses
+        :meth:`peek_block` + :meth:`attach_block` directly so blob-only
+        hits decode in parallel; this is the convenience form for
+        single-key callers.
+        """
+        hit, blob, block = self.peek_block(key)
+        if not hit:
+            return False, None
         if blob is None or block is not None:
             return True, block
         # decompress OUTSIDE the lock (a first-touch decode must not
@@ -194,16 +254,7 @@ class CuboidCache:
         # the entry still holds the same blob (a racing write or eviction
         # drops the memo; a racing decode of the same blob is benign).
         block = decompress(blob, shape, dtype)
-        block.flags.writeable = False
-        with self._lock:
-            sk = self._seg_key(key)
-            seg = self._segments.get(sk)
-            entry = seg.entries.get(key) if seg is not None else None
-            if entry is not None and entry.blob is blob and entry.block is None:
-                entry.block = block
-                seg.nbytes += block.nbytes
-                self.bytes += block.nbytes
-                self._evict_to_budget()
+        self.attach_block(key, blob, block)
         return True, block
 
     # -- population / coherence -------------------------------------------
@@ -217,6 +268,43 @@ class CuboidCache:
             for key, blob in items:
                 self._store(key, _Entry(blob=blob))
 
+    def put_prefetched(self, items: Sequence[Tuple[Key, Optional[bytes]]]) -> Tuple[int, int]:
+        """Admission-guarded population for the plan-driven prefetcher.
+
+        Unlike :meth:`put_many`, prefetched blobs may **never evict**
+        resident data: an item is admitted only while it fits in the spare
+        budget, and a freshly created segment enters at the *LRU* end — a
+        giant scan's lookahead queues behind the hot set and is the first
+        thing dropped if it is never touched (first real read promotes it
+        via the normal LRU touch).  Keys already resident are left alone
+        (a racing read/write beat us and is at least as fresh).
+
+        Returns ``(admitted, rejected)``.
+        """
+        admitted = rejected = 0
+        with self._lock:
+            for key, blob in items:
+                sk = self._seg_key(key)
+                seg = self._segments.get(sk)
+                if seg is not None and key in seg.entries:
+                    continue
+                entry = _Entry(blob=blob)
+                if self.bytes + entry.nbytes > self.max_bytes:
+                    rejected += 1
+                    continue
+                if seg is None:
+                    seg = self._segments[sk] = _Segment()
+                    self._segments.move_to_end(sk, last=False)
+                seg.entries[key] = entry
+                seg.nbytes += entry.nbytes
+                self.bytes += entry.nbytes
+                self.insertions += 1
+                self._prefetched.add(key)
+                admitted += 1
+            self.prefetch_insertions += admitted
+            self.prefetch_rejected += rejected
+        return admitted, rejected
+
     def put_block(self, key: Key, blob: bytes, block: np.ndarray) -> None:
         """Absorb a blob together with its decoded block."""
         if not block.flags.c_contiguous or block.flags.writeable:
@@ -229,6 +317,7 @@ class CuboidCache:
         sk = self._seg_key(key)
         seg = self._segments.get(sk)
         entry = seg.entries.pop(key, None) if seg is not None else None
+        self._prefetched.discard(key)
         if entry is not None:
             seg.nbytes -= entry.nbytes
             self.bytes -= entry.nbytes
@@ -249,6 +338,7 @@ class CuboidCache:
     def clear(self) -> None:
         with self._lock:
             self._segments.clear()
+            self._prefetched.clear()
             self.bytes = 0
 
     # -- introspection -----------------------------------------------------
@@ -269,6 +359,9 @@ class CuboidCache:
             "bytes": self.bytes,
             "max_bytes": self.max_bytes,
             "segments": len(self._segments),
+            "prefetch_insertions": self.prefetch_insertions,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_rejected": self.prefetch_rejected,
         }
 
 

@@ -119,6 +119,7 @@ def get_cutout(service: VolumeService, request: Request) -> Response:
     body = _encode_volume(vol, request)
     body["cuboids_read"] = stats.cuboids_read
     body["runs"] = stats.runs
+    body["zero_copy"] = bool(stats.zero_copy)  # aligned: no trim copy made
     return body
 
 
@@ -227,9 +228,10 @@ def post_flush(service: VolumeService, request: Request) -> Response:
 def get_stats(service: VolumeService, request: Request) -> Response:
     """``GET /stats`` — path/cache/queue counters for one dataset.
 
-    Returns the read/write `PathStats` (including cache hit/miss and
-    queue-depth gauges) plus, for cluster stores, the aggregate cache and
-    write-behind queue counters.
+    Returns the read/write `PathStats` (including cache hit/miss,
+    queue-depth gauges, and the cold-read pipeline's decode/prefetch
+    counters) plus, for cluster stores, the aggregate cache and
+    write-behind queue counters, and the effective `DecodePolicy` knobs.
     """
     store = service.datasets.get(request.get("dataset"))
     if store is None:
@@ -242,6 +244,16 @@ def get_stats(service: VolumeService, request: Request) -> Response:
     if hasattr(store, "cache_counters"):
         body["cache"] = store.cache_counters()
         body["queue"] = store.queue_counters()
+    pol = getattr(store, "decode_policy", None)
+    if pol is None and hasattr(store, "nodes"):  # cluster on node defaults
+        nodes = store.nodes
+        pol = nodes[0].decode_policy if nodes else None
+    if pol is not None:
+        body["decode"] = {
+            "workers": pol.workers,
+            "chunk": pol.chunk,
+            "prefetch_segments": pol.prefetch_segments,
+        }
     return body
 
 

@@ -51,7 +51,7 @@ import numpy as np
 
 from ..core import morton
 from ..core.cuboid import DatasetSpec
-from ..core.store import CuboidStore, Key, MemoryBackend, PathStats
+from ..core.store import BlockSink, CuboidStore, DecodePolicy, Key, MemoryBackend, PathStats
 from .cache import attach_cache, enable_write_behind
 from .router import Partition, Router
 
@@ -174,6 +174,7 @@ class ClusterStore:
         cache_bytes: Optional[int] = None,
         write_behind: Optional[bool] = None,
         write_behind_items: int = 512,
+        decode_policy: Optional[DecodePolicy] = None,
     ):
         self.spec = spec
         self._node_factory = node_factory or _default_node_factory
@@ -184,6 +185,12 @@ class ClusterStore:
         self._node_cache_bytes = max(1, int(cache_bytes) // n_nodes) if cache_bytes else 0
         self._write_behind = bool(write_behind)
         self._write_behind_items = write_behind_items
+        # One DecodePolicy for every shard: the per-node fan-out workers
+        # decode into a pool shared across the whole process, so the
+        # cluster's cold-read parallelism is nodes x decode chunks without
+        # per-node thread oversubscription.  None leaves factory-built
+        # nodes on their own (env-derived) policy.
+        self.decode_policy = decode_policy
         nodes = tuple(self._build_node(i) for i in range(n_nodes))
         self._topo = _Topology(nodes, Router(spec, n_nodes))
         self._gate = _OpGate()
@@ -203,6 +210,13 @@ class ClusterStore:
             self._pool = cf.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="ocp-node")
         else:
             self._pool = None
+        # Request-level pool for batch_cutout's multi-box overlap — lazily
+        # created, and deliberately DISTINCT from the node fan-out pool: a
+        # batch job itself fans out to nodes and blocks on their futures,
+        # and nesting both levels in one bounded pool deadlocks the moment
+        # every worker holds a waiting outer job.
+        self._batch_pool: Optional[cf.ThreadPoolExecutor] = None
+        self._batch_lock = threading.Lock()
 
     def _build_node(self, i: int, factory: Optional[NodeFactory] = None) -> CuboidStore:
         node = (factory or self._node_factory)(i, self.spec)
@@ -210,6 +224,8 @@ class ClusterStore:
             attach_cache(node, self._node_cache_bytes)
         if self._write_behind and node.write_behind is None:
             enable_write_behind(node, max_items=self._write_behind_items)
+        if self.decode_policy is not None:
+            node.decode_policy = self.decode_policy
         return node
 
     # -- cluster admin -----------------------------------------------------
@@ -247,6 +263,10 @@ class ClusterStore:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        with self._batch_lock:  # serialize with run_batch's lazy creation
+            batch_pool, self._batch_pool = self._batch_pool, None
+        if batch_pool is not None:
+            batch_pool.shutdown(wait=True)
         for pool in self._retired_pools:
             pool.shutdown(wait=True)
         self._retired_pools = []
@@ -305,16 +325,26 @@ class ClusterStore:
         r: int,
         runs: Sequence[Tuple[int, int]],
         channel: int = 0,
-    ) -> Dict[int, Optional[bytes]]:
-        """Batch blob fetch: split runs by owner, fetch nodes in parallel."""
+        decode: bool = False,
+    ):
+        """Batch blob fetch: split runs by owner, fetch nodes in parallel.
+
+        ``decode=True`` is the pipelined cold-read mode: each node worker
+        decompresses its own runs' blobs (chunked over the shared decode
+        pool) and the merged result maps morton index to decoded block —
+        decode work rides the per-node fan-out instead of serializing in
+        the caller thread.
+        """
         with self._gate.op():
             topo = self._topo
             by_node = topo.router.split_runs(r, list(runs))
             jobs = {
-                node: functools.partial(topo.nodes[node].fetch_runs, r, node_runs, channel)
+                node: functools.partial(
+                    topo.nodes[node].fetch_runs, r, node_runs, channel, decode=decode
+                )
                 for node, node_runs in by_node.items()
             }
-            merged: Dict[int, Optional[bytes]] = {}
+            merged: Dict[int, object] = {}
             for part in self._fan_out(jobs).values():
                 merged.update(part)
             return merged
@@ -324,19 +354,55 @@ class ClusterStore:
         r: int,
         runs: Sequence[Tuple[int, int]],
         channel: int = 0,
+        sink: Optional[BlockSink] = None,
     ) -> Dict[int, Optional[np.ndarray]]:
-        """Decoded-cuboid batch fetch (cache fast path), fanned out per node."""
+        """Decoded-cuboid batch fetch, fanned out per node.
+
+        Every node worker runs the full pipelined cold path on its own
+        runs — cache lookups, parallel decompress, plan-driven segment
+        prefetch — and with ``sink`` it assembles straight into the
+        caller's shared output buffer (the cutout engine passes a sink
+        writing disjoint ``buf_slices``, so concurrent node workers never
+        race).  Without a sink, returns the merged block dict.
+        """
         with self._gate.op():
             topo = self._topo
             by_node = topo.router.split_runs(r, list(runs))
             jobs = {
-                node: functools.partial(topo.nodes[node].fetch_blocks, r, node_runs, channel)
+                node: functools.partial(
+                    topo.nodes[node].fetch_blocks, r, node_runs, channel, sink=sink
+                )
                 for node, node_runs in by_node.items()
             }
             merged: Dict[int, Optional[np.ndarray]] = {}
             for part in self._fan_out(jobs).values():
-                merged.update(part)
+                if part:
+                    merged.update(part)
             return merged
+
+    def run_batch(self, jobs: Sequence[Callable[[], object]]) -> List[object]:
+        """Overlap independent request-level jobs (the §4.2 batch
+        interface): each job typically drives a whole cutout, whose node
+        fan-out and decode chunks then pipeline with the other boxes'.
+        Serial when request parallelism is disabled (``max_workers<=1``).
+        """
+        jobs = list(jobs)
+        # Request overlap is its own axis: a single-node cluster still
+        # pipelines one box's I/O against another's decode.  Only an
+        # explicit max_workers<=1 (the deterministic-profiling knob)
+        # forces serial execution.
+        serial = self._cfg_max_workers is not None and self._cfg_max_workers <= 1
+        if serial or len(jobs) <= 1:
+            return [job() for job in jobs]
+        with self._batch_lock:
+            if self._batch_pool is None:
+                self._batch_pool = cf.ThreadPoolExecutor(
+                    max_workers=min(8, max(2, len(self._topo.nodes))),
+                    thread_name_prefix="ocp-batch",
+                )
+            pool = self._batch_pool
+        futures = [pool.submit(job) for job in jobs]
+        return [f.result() for f in futures]
 
     def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray], channel: int = 0) -> None:
         """Batch write: group blocks by owner, write nodes in parallel.

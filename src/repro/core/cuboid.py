@@ -95,6 +95,11 @@ class DatasetSpec:
     # dims that downscale per level (X,Y for EM; never Z/T):
     scaled_dims: Tuple[int, ...] = (0, 1)
     base_cuboid: Tuple[int, ...] | None = None  # default: auto per level
+    # zlib codec level for stored cuboids (0 = stored uncompressed, 9 =
+    # smallest); a dataset property because the right trade depends on the
+    # data (labels compress far better than EM imagery, paper §3.2).
+    # ``REPRO_COMPRESS_LEVEL`` overrides it deployment-wide.
+    compress_level: int = 1
 
     @property
     def spatial_rank(self) -> int:

@@ -9,18 +9,27 @@ cost in Fig 10). Writes apply a conflict discipline per voxel (paper §3.2):
 
 Both directions are *planned*: :func:`plan_cutout` computes every
 (cuboid, destination-slice) pair up front with one vectorized Morton decode,
-the store fetches each run's blobs in a single backend call
-(`Backend.get_many`; `ClusterStore` adds per-node parallelism), each blob is
-decompressed exactly once, and blocks land in the output buffer by direct
-slice assignment — absent (lazy-zero) cuboids skip both decompression and
-assembly.  :func:`cutout_loop` preserves the original per-cuboid loop as the
-reference implementation benchmarked against the planned path.
+and the read direction is a *pipeline* (§5: throughput is assembly-bound,
+not I/O-bound).  The store's ``fetch_blocks`` drives the whole cold path —
+blobs fetched in `DecodePolicy.chunk`-sized ``get_many`` batches so one
+chunk's backend I/O overlaps another's decompression, the next curve
+segments prefetching into the hot-cuboid cache while the current one
+decodes (``read_stats.seeks`` still counts *run boundaries*, the paper's
+spatial-discontiguity metric, not these temporal batches) — and each
+decoded block is
+assembled **directly into the shared output buffer** by the worker that
+decoded it, through the plan's precomputed disjoint ``buf_slices`` (no
+intermediate per-key dict, no second pass; disjointness makes the
+concurrent writes race-free).  Absent (lazy-zero) cuboids skip both
+decompression and assembly.  :func:`cutout_loop` preserves the original
+per-cuboid loop as the reference implementation and correctness oracle.
 
 Lower-dimensional projections (§3.3 tiles) are cutouts with singleton dims.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -38,6 +47,7 @@ class CutoutStats:
     runs: int = 0
     bytes_assembled: int = 0
     bytes_discarded: int = 0   # read-and-discarded due to misalignment
+    zero_copy: int = 0         # aligned requests returned without a copy
 
 
 def _aligned_box(grid: CuboidGrid, lo, hi):
@@ -114,31 +124,34 @@ def cutout(store: CuboidStore, r: int, lo: Sequence[int], hi: Sequence[int],
         return np.zeros([max(0, h - l) for l, h in zip(lo, hi)], dtype=dtype)
     plan = plan_cutout(grid, r, lo, hi, max_runs=max_runs)
     buf = np.zeros(plan.buf_shape, dtype=dtype)
-    cshape = grid.cuboid_shape
-    if getattr(store, "has_cache", False):
-        # hot-cuboid tier: decoded blocks come straight from the cache,
-        # skipping backend I/O and decompression for warm regions
-        blocks = store.fetch_blocks(r, plan.runs, channel)
-        for m, sl, keep in zip(plan.cells, plan.buf_slices, plan.keep_shapes):
-            block = blocks.get(int(m))
-            if block is None:
-                continue  # lazy cuboid: buffer is already zeros
-            buf[sl] = block[tuple(slice(0, s) for s in keep)]
-    else:
-        blobs = store.fetch_runs(r, plan.runs, channel)
-        for m, sl, keep in zip(plan.cells, plan.buf_slices, plan.keep_shapes):
-            blob = blobs.get(int(m))
-            if blob is None:
-                continue  # lazy cuboid: buffer is already zeros
-            block = decompress(blob, cshape, dtype)
-            buf[sl] = block[tuple(slice(0, s) for s in keep)]
-    out = buf[plan.trim]
+    targets = {int(m): (sl, keep) for m, sl, keep in
+               zip(plan.cells, plan.buf_slices, plan.keep_shapes)}
+
+    def assemble(m: int, block: Optional[np.ndarray]) -> None:
+        # Called from decode workers / node fan-out threads: buf_slices
+        # are pairwise disjoint, so concurrent writes never race.
+        if block is None:
+            return  # lazy cuboid: buffer is already zeros
+        t = targets.get(m)
+        if t is None:
+            return  # outside box/volume (run coarsening / pow2 padding)
+        sl, keep = t
+        buf[sl] = block[tuple(slice(0, s) for s in keep)]
+
+    store.fetch_blocks(r, plan.runs, channel, sink=assemble)
+    # Cuboid-aligned requests assemble the answer exactly: hand the buffer
+    # over as-is instead of copying the whole volume through a no-op trim.
+    aligned = (plan.lo == plan.alo
+               and plan.buf_shape == tuple(h - l for l, h
+                                           in zip(plan.lo, plan.hi)))
+    out = buf if aligned else np.ascontiguousarray(buf[plan.trim])
     if stats is not None:
         stats.cuboids_read += len(plan.cells)
         stats.runs += len(plan.runs)
         stats.bytes_assembled += out.nbytes
         stats.bytes_discarded += buf.nbytes - out.nbytes
-    return np.ascontiguousarray(out)
+        stats.zero_copy += int(aligned)
+    return out
 
 
 def cutout_loop(store: CuboidStore, r: int, lo: Sequence[int],
@@ -284,8 +297,20 @@ def project(store: CuboidStore, r: int, lo: Sequence[int],
 
 def batch_cutout(store: CuboidStore, r: int,
                  boxes: List[Box], channel: int = 0) -> List[np.ndarray]:
-    """Batch interface (paper §4.2): amortize fixed costs over requests."""
-    return [cutout(store, r, lo, hi, channel) for lo, hi in boxes]
+    """Batch interface (paper §4.2): amortize fixed costs over requests.
+
+    Over a cluster the boxes *overlap*: each box's plan, node fan-out, and
+    decode chunks run as one job on the cluster's request-level pool, so
+    box B's I/O pipelines with box A's assembly instead of queuing behind
+    it.  Results keep request order.  Stores without a ``run_batch``
+    (single `CuboidStore`) execute serially, as before.
+    """
+    jobs = [functools.partial(cutout, store, r, lo, hi, channel)
+            for lo, hi in boxes]
+    runner = getattr(store, "run_batch", None)
+    if runner is None:
+        return [job() for job in jobs]
+    return list(runner(jobs))
 
 
 def ingest(store: CuboidStore, r: int, volume: np.ndarray,

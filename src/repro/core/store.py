@@ -11,21 +11,84 @@ measurable property of the system rather than prose.
 Storage itself is a dict or directory of gzip-compressed cuboids keyed by
 (resolution, channel, morton_index). Lazy allocation: a missing cuboid reads
 as zeros and occupies no storage (paper §3.2).
+
+The *cold read path* is a pipeline (paper §5: cutout throughput is bound by
+assembly — decompress + placement — not disk): ``fetch_blocks`` decodes
+blobs in parallel chunks on a shared decode pool, hands each block to the
+caller's sink from the worker that decoded it, and (with a cache attached)
+prefetches the next curve segments of a planned run schedule into the
+hot-cuboid cache while the current one decodes.  :class:`DecodePolicy`
+holds the knobs (``REPRO_DECODE_WORKERS`` / ``REPRO_PREFETCH_SEGMENTS``).
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import dataclasses
 import os
 import threading
 import time
 import zlib
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .cuboid import DatasetSpec
 
 Key = Tuple[int, int, int]  # (resolution, channel, morton index)
+
+# sink(morton, block) — a decoded-cuboid consumer; blocks may arrive from
+# decode worker threads, so sinks must be race-free (the cutout engine's
+# sink writes disjoint output-buffer slices).
+BlockSink = Callable[[int, Optional[np.ndarray]], None]
+
+_MISS = object()  # sentinel: "not in the prefetch handoff" (None = absent)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePolicy:
+    """Cold-read pipeline knobs (paper §5: cutouts are assembly-bound).
+
+    ``workers`` sizes the decode thread pool (0/1 = serial decode;
+    zlib releases the GIL, so threads buy real decompress parallelism);
+    ``chunk`` is the number of cuboids per decode task (amortizes submit
+    overhead); ``prefetch_segments`` is how many *future* runs of a
+    planned schedule are pulled into the hot-cuboid cache while the
+    current one decodes (0 = off; needs a cache as the landing zone).
+
+    ``from_env`` reads the ``REPRO_DECODE_WORKERS`` /
+    ``REPRO_PREFETCH_SEGMENTS`` knobs; workers default to the core count.
+    """
+
+    workers: int = 0
+    chunk: int = 16
+    prefetch_segments: int = 0
+
+    @classmethod
+    def from_env(cls) -> "DecodePolicy":
+        workers = os.environ.get("REPRO_DECODE_WORKERS", "")
+        prefetch = os.environ.get("REPRO_PREFETCH_SEGMENTS", "")
+        return cls(
+            workers=int(workers) if workers else (os.cpu_count() or 1),
+            prefetch_segments=int(prefetch) if prefetch else 1,
+        )
+
+
+# Decode pools are shared per worker count across every store in the
+# process (like numpy's global thread pool): per-store pools would leak
+# idle threads for each short-lived store the tests and the cluster
+# create, and a ClusterStore's node shards *should* decode into one pool —
+# that is exactly the node-parallel pipeline saturating the cores.
+_DECODE_POOLS: Dict[int, cf.ThreadPoolExecutor] = {}
+_DECODE_POOLS_LOCK = threading.Lock()
+
+
+def _decode_pool(workers: int) -> cf.ThreadPoolExecutor:
+    with _DECODE_POOLS_LOCK:
+        pool = _DECODE_POOLS.get(workers)
+        if pool is None:
+            pool = _DECODE_POOLS[workers] = cf.ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="ocp-decode")
+        return pool
 
 
 @dataclasses.dataclass
@@ -40,6 +103,12 @@ class PathStats:
     invariant the stress suite asserts.  ``queue_depth`` / ``queue_peak``
     mirror the write-behind queue occupancy (gauges, updated on enqueue
     and flush).
+
+    ``decoded_blocks`` / ``decode_s`` measure decompress work on the read
+    path (the paper's assembly bound).  ``prefetch_issued`` /
+    ``prefetch_cuboids`` count the plan-driven cache prefetcher's
+    background work; prefetches are not client reads, so they stay out of
+    the reads == hits + misses invariant.
     """
 
     reads: int = 0
@@ -52,6 +121,10 @@ class PathStats:
     cache_misses: int = 0   # lookups that had to go below the cache
     queue_depth: int = 0    # write-behind pending writes (gauge)
     queue_peak: int = 0     # max pending writes observed (gauge)
+    decoded_blocks: int = 0  # blobs decompressed on the read path
+    decode_s: float = 0.0    # wall time inside decompress (incl. workers)
+    prefetch_issued: int = 0    # schedule-lookahead prefetch tasks launched
+    prefetch_cuboids: int = 0   # blobs the prefetcher admitted to the cache
 
     def snapshot(self) -> "PathStats":
         return dataclasses.replace(self)
@@ -134,11 +207,14 @@ class DirectoryBackend(Backend):
         return os.path.join(self.root, str(r), str(c), f"{m:016x}.bin")
 
     def get(self, key):
-        p = self._path(key)
-        if not os.path.exists(p):
+        # EAFP: open directly instead of stat-then-open — the exists()
+        # probe was a full extra syscall per cuboid on the cold path
+        # (~25% of a cacheless cutout's wall time under profiling).
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except (FileNotFoundError, NotADirectoryError):
             return None
-        with open(p, "rb") as f:
-            return f.read()
 
     def put(self, key, blob):
         p = self._path(key)
@@ -182,7 +258,12 @@ class DirectoryBackend(Backend):
 
 
 def compress(arr: np.ndarray, level: int = 1) -> bytes:
-    """gzip/zlib cuboid compression (paper §3.2: labels compress well)."""
+    """gzip/zlib cuboid compression (paper §3.2: labels compress well).
+
+    The codec level is a dataset property (`DatasetSpec.compress_level`,
+    overridable via ``REPRO_COMPRESS_LEVEL``); `CuboidStore` resolves it
+    once and passes it here on every write.
+    """
     return zlib.compress(np.ascontiguousarray(arr).tobytes(), level)
 
 
@@ -215,12 +296,18 @@ class CuboidStore:
     def __init__(self, spec: DatasetSpec,
                  backend: Optional[Backend] = None,
                  write_path_backend: Optional[Backend] = None,
-                 compression_level: int = 1,
-                 cache=None):
+                 compression_level: Optional[int] = None,
+                 cache=None,
+                 decode_policy: Optional[DecodePolicy] = None):
         self.spec = spec
         self.read_backend = backend or MemoryBackend()
         self.write_backend = write_path_backend
+        if compression_level is None:
+            # codec level: explicit arg > REPRO_COMPRESS_LEVEL > spec field
+            env = os.environ.get("REPRO_COMPRESS_LEVEL", "")
+            compression_level = int(env) if env else spec.compress_level
         self.compression_level = compression_level
+        self.decode_policy = decode_policy or DecodePolicy.from_env()
         self.read_stats = PathStats()
         self.write_stats = PathStats()
         self._np_dtype = np.dtype(spec.dtype)
@@ -270,10 +357,13 @@ class CuboidStore:
         return np.zeros(self._cuboid_shape(r), dtype=self._np_dtype)
 
     # -- the merged view below the cache -----------------------------------
-    def _fetch_misses(self, keys: Sequence[Key]) -> List[Optional[bytes]]:
+    def _fetch_misses(self, keys: Sequence[Key],
+                      record: bool = True) -> List[Optional[bytes]]:
         """Resolve keys below the cache: pending write-behind values first
         (freshest), then the write path, then the read path.  Maintains the
-        per-path read counters (pending hits count on the read path)."""
+        per-path read counters (pending hits count on the read path);
+        ``record=False`` skips them — background prefetches are not client
+        reads and must not disturb the reads == hits + misses invariant."""
         blobs: List[Optional[bytes]] = [None] * len(keys)
         resolved = [False] * len(keys)
         pending_hits = 0
@@ -303,11 +393,12 @@ class CuboidStore:
                 rp_bytes = sum(len(b) for b in got if b is not None)
             for i, blob in zip(idx, fetched):
                 blobs[i] = blob
-        with self._stats_lock:
-            self.read_stats.reads += pending_hits + rp_reads
-            self.read_stats.read_bytes += rp_bytes
-            self.write_stats.reads += wp_reads
-            self.write_stats.read_bytes += wp_bytes
+        if record:
+            with self._stats_lock:
+                self.read_stats.reads += pending_hits + rp_reads
+                self.read_stats.read_bytes += rp_bytes
+                self.write_stats.reads += wp_reads
+                self.write_stats.read_bytes += wp_bytes
         return blobs
 
     def _read_gen(self) -> int:
@@ -433,7 +524,7 @@ class CuboidStore:
                 for m in range(start, stop)]
 
     def fetch_runs(self, r: int, runs: Sequence[Tuple[int, int]],
-                   channel: int = 0) -> Dict[int, Optional[bytes]]:
+                   channel: int = 0, decode: bool = False):
         """Batch-fetch compressed blobs for every cuboid in ``runs``.
 
         Lookup order per key: hot-cuboid cache (when attached), pending
@@ -441,7 +532,15 @@ class CuboidStore:
         path — write path first, misses fall through to the read path.
         Absent cuboids come back as ``None`` (lazy zeros) and are cached as
         absences.  Returns {morton_index: blob | None}.
+
+        ``decode=True`` switches to the pipelined cold-read mode: blobs are
+        decompressed *here* (chunked across the decode pool per
+        :class:`DecodePolicy`) and the result maps morton index to decoded
+        block — the mode the cluster's per-node fan-out workers run so
+        decompression parallelizes across nodes and cores.
         """
+        if decode:
+            return self.fetch_blocks(r, runs, channel)
         out: Dict[int, Optional[bytes]] = {}
         cache = self.cache
         for start, stop in runs:
@@ -478,54 +577,357 @@ class CuboidStore:
                 out[m] = blob
         return out
 
+    def _fetch_decode_chunks(self, cells: Sequence[int],
+                             keys: Sequence[Key], shape, dtype,
+                             emit: BlockSink) -> None:
+        """The chunked cold-read pipeline: fetch + decode + assemble.
+
+        The miss set is split into chunks of ``DecodePolicy.chunk``
+        cuboids; each chunk is an independent stage instance — resolve the
+        blobs through the merged read view, decompress them, hand every
+        block to ``emit`` from the worker that decoded it (sinks write
+        disjoint buffer slices, so this is race-free), then absorb into
+        the cache under the generation guard.  Chunks drain from a shared
+        work list: pool workers *and the calling thread* pull from it, so
+        I/O of one chunk overlaps decompression of another even on a
+        single-node store, the caller is never idle, and a saturated pool
+        degrades to the caller draining everything itself (no deadlock).
+        """
+        def run_chunk(lo: int, hi: int) -> None:
+            sub = list(keys[lo:hi])
+            gen0 = self._read_gen()
+            fetched = self._fetch_misses(sub)
+            t0 = time.perf_counter()
+            decoded: List[Optional[np.ndarray]] = []
+            n_blobs = 0
+            for m, blob in zip(cells[lo:hi], fetched):
+                if blob is None:
+                    block = None
+                else:
+                    block = decompress(blob, shape, dtype)
+                    n_blobs += 1
+                decoded.append(block)
+                emit(m, block)
+            dt = time.perf_counter() - t0
+            self._absorb_reads(list(zip(sub, fetched)), gen0,
+                               blocks=decoded)
+            with self._stats_lock:
+                self.read_stats.decoded_blocks += n_blobs
+                self.read_stats.decode_s += dt
+
+        self._drain_chunks(len(keys), run_chunk)
+
+    def _decode_hit_blobs(self, items: Sequence[Tuple[int, Key, bytes]],
+                          shape, dtype, emit: BlockSink) -> None:
+        """Parallel decode for blobs that need no backend fetch — cache
+        hits that are blob-only, or prefetch-handoff blobs the cache
+        refused to admit: chunked across the decode pool like misses,
+        memoized back onto the cache entry via ``attach_block`` (a
+        silent no-op for keys that are not resident)."""
+        cache = self.cache
+
+        def run_chunk(lo: int, hi: int) -> None:
+            t0 = time.perf_counter()
+            for m, key, blob in items[lo:hi]:
+                block = decompress(blob, shape, dtype)
+                cache.attach_block(key, blob, block)
+                emit(m, block)
+            with self._stats_lock:
+                self.read_stats.decoded_blocks += hi - lo
+                self.read_stats.decode_s += time.perf_counter() - t0
+
+        self._drain_chunks(len(items), run_chunk)
+
+    def _drain_chunks(self, n: int, run_chunk) -> None:
+        """Run ``run_chunk(lo, hi)`` over ``n`` items in
+        ``DecodePolicy.chunk``-sized pieces, drained from a shared work
+        list by pool workers *and the calling thread* — the caller is
+        never idle, and a saturated pool degrades to the caller draining
+        everything itself (progress is guaranteed, no deadlock)."""
+        pol = self.decode_policy
+        step = max(1, pol.chunk)
+        bounds = [(lo, min(lo + step, n)) for lo in range(0, n, step)]
+        if pol.workers <= 1 or len(bounds) <= 1:
+            for lo, hi in bounds:
+                run_chunk(lo, hi)
+            return
+        todo = list(reversed(bounds))  # popped back-first = schedule order
+        todo_lock = threading.Lock()
+
+        def drain() -> None:
+            while True:
+                with todo_lock:
+                    if not todo:
+                        return
+                    lo, hi = todo.pop()
+                run_chunk(lo, hi)
+
+        # The caller drains too and counts toward its own budget: each
+        # caller adds at most (workers - 1) pool tasks on top of itself.
+        # Under concurrent callers (cluster node fan-out) the shared pool
+        # still caps pooled decode at pol.workers threads process-wide;
+        # the callers beyond that are the node workers themselves, which
+        # IS the intended node-parallel decode.
+        pool = _decode_pool(pol.workers)
+        futures = [pool.submit(drain)
+                   for _ in range(min(pol.workers - 1, len(bounds) - 1))]
+        # Always join the pool drains before returning — an exception in
+        # the caller's own drain must not strand workers writing into a
+        # buffer the (failed) request has already abandoned.  The work
+        # list is cleared first so they stop after their current chunk;
+        # the first error (caller's preferentially) is re-raised.
+        error: Optional[BaseException] = None
+        try:
+            drain()
+        except BaseException as e:
+            error = e
+            with todo_lock:
+                todo.clear()
+        for f in futures:
+            try:
+                f.result()
+            except BaseException as e:
+                if error is None:
+                    error = e
+        if error is not None:
+            raise error
+
     def fetch_blocks(self, r: int, runs: Sequence[Tuple[int, int]],
-                     channel: int = 0) -> Dict[int, Optional[np.ndarray]]:
-        """Decoded-cuboid variant of :meth:`fetch_runs` (the cutout
-        engine's cache fast path): hot cuboids skip backend I/O *and*
-        decompression, served as read-only arrays memoized by the cache.
-        Returns {morton_index: ndarray | None} (None = lazy zeros).
+                     channel: int = 0,
+                     sink: Optional[BlockSink] = None
+                     ) -> Dict[int, Optional[np.ndarray]]:
+        """Decoded-cuboid variant of :meth:`fetch_runs` — the cutout
+        engine's one read path, pipelined:
+
+        * hot cuboids come straight from the cache (no backend I/O, no
+          decompression — read-only arrays memoized by the cache);
+        * misses pipeline in chunks across the shared decode pool
+          (:class:`DecodePolicy`): every chunk fetches its blobs through
+          the merged read view, decompresses them, and assembles from the
+          worker that decoded them, with the calling thread draining
+          chunks too — so one chunk's backend I/O overlaps another's
+          decompression even on a single node;
+        * with a cache attached, the next ``prefetch_segments`` runs of
+          the schedule stream into the cache *while the current run
+          decodes* (the paper's sequential-read doctrine applied to the
+          memory tier).
+
+        With ``sink`` every (morton, block) pair is handed over as soon as
+        it is available — possibly from a decode worker thread (sinks must
+        be race-free; the cutout engine writes disjoint output-buffer
+        slices) — and the returned dict is empty.  Without it, returns
+        {morton_index: ndarray | None} (None = lazy zeros).
         """
         shape = self._cuboid_shape(r)
         dtype = self._np_dtype
         cache = self.cache
-        if cache is None:
-            blobs = self.fetch_runs(r, runs, channel)
-            return {m: None if b is None else decompress(b, shape, dtype)
-                    for m, b in blobs.items()}
         out: Dict[int, Optional[np.ndarray]] = {}
-        for start, stop in runs:
+        emit: BlockSink = sink if sink is not None else out.__setitem__
+        runs = list(runs)
+        advance = self._prefetch_plan(r, runs, channel)
+        if advance is None:
+            # No prefetch landing zone / lookahead: flatten the WHOLE
+            # schedule into one chunked pipeline, so short runs (a
+            # fragmented box decomposes into many few-cuboid runs) still
+            # fetch and decode across the pool instead of serializing at
+            # run boundaries.
             t0 = time.perf_counter()
-            keys = [(r, channel, m) for m in range(start, stop)]
-            blocks: List[Optional[np.ndarray]] = [None] * len(keys)
-            miss_idx: List[int] = []
+            cells: List[int] = []
+            keys: List[Key] = []
+            hit_blobs: List[Tuple[int, Key, bytes]] = []
             hits_n = 0
-            for i, k in enumerate(keys):
-                hit, block = cache.get_block(k, shape, dtype)
-                if hit:
-                    blocks[i] = block
-                    hits_n += 1
-                else:
-                    miss_idx.append(i)
+            for start, stop in runs:
+                for m in range(start, stop):
+                    k = (r, channel, m)
+                    if cache is not None:
+                        hit, blob, block = cache.peek_block(k)
+                        if hit:
+                            hits_n += 1
+                            if blob is None or block is not None:
+                                emit(m, block)
+                            else:
+                                hit_blobs.append((m, k, blob))
+                            continue
+                    cells.append(m)
+                    keys.append(k)
             with self._stats_lock:
-                self.read_stats.seeks += 1
+                self.read_stats.seeks += len(runs)
                 self.read_stats.reads += hits_n
-                self.read_stats.cache_hits += hits_n
-                self.read_stats.cache_misses += len(miss_idx)
-            if miss_idx:
-                gen0 = self._read_gen()
-                sub = [keys[i] for i in miss_idx]
-                fetched = self._fetch_misses(sub)
-                decoded = [None if b is None else decompress(b, shape, dtype)
-                           for b in fetched]
-                for i, block in zip(miss_idx, decoded):
-                    blocks[i] = block
-                self._absorb_reads(list(zip(sub, fetched)), gen0,
-                                   blocks=decoded)
+                if cache is not None:
+                    self.read_stats.cache_hits += hits_n
+                    self.read_stats.cache_misses += len(keys)
+            if hit_blobs:
+                self._decode_hit_blobs(hit_blobs, shape, dtype, emit)
+            if keys:
+                self._fetch_decode_chunks(cells, keys, shape, dtype, emit)
             with self._stats_lock:
                 self.read_stats.time_s += time.perf_counter() - t0
-            for m, block in zip(range(start, stop), blocks):
-                out[m] = block
+            return out
+        # Segment-pipelined mode: prefetch is engaged, which implies a
+        # cache is attached (advance would be None otherwise).
+        for i, (start, stop) in enumerate(runs):
+            t0 = time.perf_counter()  # includes any wait on the handoff
+            handoff = advance(i)
+            keys = [(r, channel, m) for m in range(start, stop)]
+            miss_idx: List[int] = []
+            hit_blobs: List[Tuple[int, Key, bytes]] = []
+            hits_n = 0
+            for j, k in enumerate(keys):
+                hit, blob, block = cache.peek_block(k)
+                if not hit:
+                    miss_idx.append(j)
+                    continue
+                hits_n += 1
+                if blob is None or block is not None:
+                    emit(start + j, block)  # lazy zero / memoized
+                else:
+                    hit_blobs.append((start + j, k, blob))
+            # Cache misses resolve from the prefetch handoff first (its
+            # generation was validated in advance(); the cache is
+            # consulted first above, so an absorbed fresher write always
+            # wins).  Only the remainder pays a backend fetch.
+            pf_pairs: List[Tuple[int, Key, bytes]] = []
+            still_missing = miss_idx
+            if handoff:
+                still_missing = []
+                for j in miss_idx:
+                    blob = handoff.get(keys[j], _MISS)
+                    if blob is _MISS:
+                        still_missing.append(j)
+                    elif blob is None:
+                        emit(start + j, None)  # known absent: lazy zeros
+                    else:
+                        pf_pairs.append((start + j, keys[j], blob))
+            n_handoff = len(miss_idx) - len(still_missing)
+            with self._stats_lock:
+                self.read_stats.seeks += 1
+                self.read_stats.reads += hits_n + n_handoff
+                self.read_stats.cache_hits += hits_n
+                self.read_stats.cache_misses += len(miss_idx)
+            if hit_blobs:  # decode-only work (e.g. prefetched segments)
+                self._decode_hit_blobs(hit_blobs, shape, dtype, emit)
+            if pf_pairs:  # handed-off blobs: decode-only work too
+                self._decode_hit_blobs(pf_pairs, shape, dtype, emit)
+            if still_missing:
+                self._fetch_decode_chunks(
+                    [start + j for j in still_missing],
+                    [keys[j] for j in still_missing], shape, dtype, emit)
+            with self._stats_lock:
+                self.read_stats.time_s += time.perf_counter() - t0
         return out
+
+    # -- plan-driven segment prefetch (paper §5 sequential-read doctrine) --
+    def _prefetch_plan(self, r: int, runs: Sequence[Tuple[int, int]],
+                       channel: int):
+        """Build the schedule-lookahead callback for one planned fetch.
+
+        Returns ``None`` when prefetch cannot engage (no cache to land
+        in, lookahead disabled, or a single-run schedule) — the caller
+        then flattens the schedule into one chunked pipeline instead.
+
+        ``advance(i)`` keeps the next ``prefetch_segments`` runs after
+        ``i`` in flight on the decode pool: each task pulls one future
+        run's blobs through the merged read view into the hot-cuboid
+        cache (admission-guarded — prefetch never evicts resident data),
+        so by the time assembly reaches that run it is all cache hits.
+        If run ``i`` itself is still being prefetched, the foreground
+        rides that task: ``advance(i)`` waits for it and returns its
+        fetched ``{key: blob}`` for direct consumption, so the
+        prefetcher's I/O is never wasted even when cache admission was
+        refused (budget) — the handoff that turns lookahead into a
+        pipeline rather than a race.  The wait is skipped (and the
+        handoff abandoned) as soon as any write lands: a generation
+        check at both ends guarantees a handed-off blob can never mask
+        a fresher write, and a write-heavy interleaving degrades to the
+        plain foreground fetch instead of blocking on doomed lookahead.
+        """
+        pol = self.decode_policy
+        depth = pol.prefetch_segments
+        if depth <= 0 or self.cache is None or len(runs) <= 1:
+            return None  # caller flattens the schedule instead
+        if sum(stop - start for start, stop in runs) < 2 * max(1, pol.chunk):
+            return None  # too small to amortize lookahead startup
+        pool = _decode_pool(max(2, pol.workers))
+        inflight: Dict[int, Tuple[int, cf.Future]] = {}
+
+        def advance(i: int) -> Optional[Dict[Key, Optional[bytes]]]:
+            gen_now = self._read_gen()
+            n = 0
+            for j in range(i + 1, min(i + 1 + depth, len(runs))):
+                if j not in inflight:
+                    inflight[j] = (gen_now, pool.submit(
+                        self._prefetch_run, r, runs[j], channel))
+                    n += 1
+            if n:
+                with self._stats_lock:
+                    self.read_stats.prefetch_issued += n
+            ent = inflight.get(i)
+            if ent is None:
+                return None
+            gen_issue, fut = ent
+            if self._read_gen() != gen_issue:
+                # a write landed since issue: the task's result is (or
+                # will be) stale — don't wait on doomed lookahead
+                fut.cancel()
+                return None
+            if fut.cancel():
+                return None  # still queued: fetching beats waiting
+            try:
+                res = fut.result()
+            except Exception:
+                return None
+            if res is None:
+                return None
+            gen0, blobs = res
+            if self._read_gen() != gen0:
+                return None  # raced by a write mid-fetch: discard
+            return blobs
+
+        return advance
+
+    def _prefetch_run(
+        self, r: int, run: Tuple[int, int], channel: int
+    ) -> Optional[Tuple[int, Dict[Key, Optional[bytes]]]]:
+        """Background task: fetch one future run's blobs ahead of the
+        foreground, admitting them to the cache when budget allows.
+
+        Returns ``(gen0, {key: blob})`` so ``advance`` can hand the
+        fetched blobs straight to the foreground even when the cache
+        refused admission — lookahead I/O is consumed either way.
+        Coherent on both tiers: keys resolve through the same merged
+        view as reads (pending write-behind values first), cache
+        admission is generation-guarded under the order lock, and the
+        caller re-validates ``gen0`` before consuming the handoff — a
+        stale blob can never mask a fresher write.  Failures are
+        swallowed (returns ``None``); prefetch must never break the
+        foreground read it is trying to speed up.
+        """
+        try:
+            cache = self.cache
+            if cache is None:
+                return None
+            keys = [(r, channel, m) for m in range(run[0], run[1])
+                    if not cache.probe((r, channel, m))[0]]
+            if not keys:
+                return None
+            gen0 = self._read_gen()
+            blobs = self._fetch_misses(keys, record=False)
+            # Admission precheck gates only the CACHE population: with no
+            # spare budget even for entry overheads, put_prefetched would
+            # reject wholesale — skip the lock traffic, the handoff still
+            # delivers the blobs to the foreground.
+            spare = cache.max_bytes - cache.bytes
+            if spare > getattr(cache, "entry_overhead", 0) * len(keys):
+                with self._order_lock:
+                    if self._write_gen == gen0:
+                        admitted, _ = cache.put_prefetched(
+                            list(zip(keys, blobs)))
+                        if admitted:
+                            with self._stats_lock:
+                                self.read_stats.prefetch_cuboids += admitted
+            return gen0, dict(zip(keys, blobs))
+        except Exception:
+            return None
 
     def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray],
                       channel: int = 0) -> None:

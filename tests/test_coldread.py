@@ -1,0 +1,466 @@
+"""Cold-read pipeline suite (node-parallel decode, shared-buffer assembly,
+plan-driven segment prefetch).
+
+The contract under test: the pipelined cold path — decode fanned out
+across worker threads, blocks assembled straight into the shared output
+buffer through the plan's disjoint ``buf_slices``, future curve segments
+prefetching into the hot-cuboid cache mid-assembly — is **bit-identical to
+``cutout_loop``** for every policy, shard count, and cache configuration,
+under seeded and property-based op interleavings, and under concurrent
+cold readers racing a live ``rebalance()``.
+
+Also here: the satellite regressions — zero-copy aligned cutouts,
+``batch_cutout`` overlap, the `DatasetSpec.compress_level` /
+``REPRO_COMPRESS_LEVEL`` plumbing, the `DecodePolicy` env knobs, and the
+cache's prefetch admission guard.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.cluster import ClusterStore, CuboidCache, attach_cache
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import (CutoutStats, batch_cutout, cutout,
+                               cutout_loop, ingest, plan_cutout,
+                               write_cutout)
+from repro.core.store import CuboidStore, DecodePolicy, MemoryBackend
+
+SHAPE = (32, 32, 16)
+CUBOID = (8, 8, 4)
+
+SERIAL = DecodePolicy(workers=0, prefetch_segments=0)
+PARALLEL = DecodePolicy(workers=4, chunk=2, prefetch_segments=0)
+PIPELINED = DecodePolicy(workers=4, chunk=2, prefetch_segments=2)
+POLICIES = {"serial": SERIAL, "parallel": PARALLEL, "pipelined": PIPELINED}
+
+
+def spec(**kw):
+    return DatasetSpec(name="cr", volume_shape=SHAPE, dtype="uint8",
+                       base_cuboid=CUBOID, **kw)
+
+
+def volume(seed=0):
+    return np.random.default_rng(seed).integers(
+        1, 255, size=SHAPE, dtype=np.uint8)
+
+
+def seeded_boxes(n, seed=5):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        lo = [int(rng.integers(0, s - 1)) for s in SHAPE]
+        hi = [int(rng.integers(l + 1, s + 1)) for l, s in zip(lo, SHAPE)]
+        out.append((lo, hi))
+    return out
+
+
+def reference(vol):
+    ref = CuboidStore(spec(), decode_policy=SERIAL)
+    ingest(ref, 0, vol)
+    return ref
+
+
+# -- bit-identity: pipelined cold reads vs the cutout_loop oracle ----------
+
+@pytest.mark.parametrize("policy", list(POLICIES), ids=list(POLICIES))
+@pytest.mark.parametrize("n_nodes", [1, 2, 4])
+@pytest.mark.parametrize("cached", [False, True])
+def test_cold_reads_match_loop_oracle(n_nodes, cached, policy):
+    vol = volume()
+    ref = reference(vol)
+    sub = ClusterStore(spec(), n_nodes=n_nodes,
+                       cache_bytes=(64 << 20) if cached else 0,
+                       write_behind=False,
+                       decode_policy=POLICIES[policy])
+    ingest(sub, 0, vol)
+    if cached:  # cold = cache-empty, not just disk-cold
+        for node in sub.nodes:
+            if node.cache is not None:
+                node.cache.clear()
+    try:
+        for lo, hi in seeded_boxes(8):
+            want = cutout_loop(ref, 0, lo, hi)
+            np.testing.assert_array_equal(cutout(sub, 0, lo, hi), want)
+            # second (warm / prefetch-primed) pass stays identical
+            np.testing.assert_array_equal(cutout(sub, 0, lo, hi), want)
+    finally:
+        sub.close()
+
+
+def test_parallel_decode_single_store_matches():
+    """`CuboidStore` alone benefits: chunked parallel decode, no cluster."""
+    vol = volume(seed=3)
+    store = CuboidStore(spec(), decode_policy=PARALLEL)
+    ingest(store, 0, vol)
+    ref = reference(vol)
+    for lo, hi in seeded_boxes(6, seed=7):
+        np.testing.assert_array_equal(cutout(store, 0, lo, hi),
+                                      cutout_loop(ref, 0, lo, hi))
+    assert store.read_stats.decoded_blocks > 0
+    assert store.read_stats.decode_s > 0.0
+
+
+def test_fetch_runs_decode_mode():
+    """`fetch_runs(decode=True)` returns decoded blocks on both store
+    kinds, equal to decompressing the blob mode's result."""
+    vol = volume(seed=4)
+    single = CuboidStore(spec(), decode_policy=PARALLEL)
+    cluster = ClusterStore(spec(), n_nodes=2, decode_policy=PARALLEL)
+    ingest(single, 0, vol)
+    ingest(cluster, 0, vol)
+    runs = plan_cutout(single.spec.grid(0), 0, (0, 0, 0), SHAPE).runs
+    try:
+        for store in (single, cluster):
+            blobs = store.fetch_runs(0, runs)
+            blocks = store.fetch_runs(0, runs, decode=True)
+            assert set(blobs) == set(blocks)
+            for m, blob in blobs.items():
+                if blob is None:
+                    assert blocks[m] is None
+                else:
+                    np.testing.assert_array_equal(
+                        blocks[m],
+                        single.read_cuboid(0, m))
+    finally:
+        cluster.close()
+
+
+if HAVE_HYPOTHESIS:
+    op_strategy = st.lists(
+        st.one_of(
+            st.tuples(st.just("write"), st.integers(0, 7),
+                      st.integers(0, 254)),
+            st.tuples(st.just("cutout"), st.integers(0, 5)),
+            st.tuples(st.just("clear_cache"), st.just(0)),
+            st.tuples(st.just("write_cutout"), st.integers(0, 5),
+                      st.integers(1, 254)),
+        ),
+        min_size=1, max_size=12)
+else:  # decoration-time stand-in; the test is skipped
+    op_strategy = st.nothing()
+
+
+@given(ops=op_strategy)
+@settings(max_examples=25, deadline=None)
+def test_interleavings_match_reference(ops):
+    """Random read/write/cutout/cache-drop interleavings over the
+    pipelined cluster stay bit-identical to an uncached reference."""
+    vol = volume(seed=9)
+    ref = reference(vol)
+    sub = ClusterStore(spec(), n_nodes=2, cache_bytes=8 << 10,
+                       write_behind=False, decode_policy=PIPELINED)
+    ingest(sub, 0, vol)
+    boxes = seeded_boxes(6, seed=11)
+    grid = ref.spec.grid(0)
+    try:
+        for op in ops:
+            if op[0] == "write":
+                m = op[1] % grid.n_cuboids
+                data = np.full(grid.cuboid_shape, op[2], dtype=np.uint8)
+                ref.write_cuboid(0, m, data)
+                sub.write_cuboid(0, m, data)
+            elif op[0] == "cutout":
+                lo, hi = boxes[op[1]]
+                np.testing.assert_array_equal(
+                    cutout(sub, 0, lo, hi), cutout_loop(ref, 0, lo, hi))
+            elif op[0] == "clear_cache":
+                for node in sub.nodes:
+                    if node.cache is not None:
+                        node.cache.clear()
+            else:  # write_cutout
+                lo, hi = boxes[op[1]]
+                patch = np.full([h - l for l, h in zip(lo, hi)], op[2],
+                                dtype=np.uint8)
+                write_cutout(ref, 0, lo, patch)
+                write_cutout(sub, 0, lo, patch)
+        for lo, hi in boxes:
+            np.testing.assert_array_equal(
+                cutout(sub, 0, lo, hi), cutout_loop(ref, 0, lo, hi))
+    finally:
+        sub.close()
+
+
+def test_concurrent_cold_readers_and_rebalance():
+    """Concurrent cold readers never corrupt the shared buffer and never
+    deadlock against a live rebalance: every cutout, before/during/after
+    the 2→4→3 walk, is bit-identical to the immutable ingested volume."""
+    vol = volume(seed=13)
+    sub = ClusterStore(spec(), n_nodes=2, cache_bytes=32 << 10,
+                       write_behind=True, decode_policy=PIPELINED)
+    ingest(sub, 0, vol)
+    boxes = seeded_boxes(6, seed=17)
+    errors = []
+    stop = threading.Event()
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                lo, hi = boxes[int(rng.integers(0, len(boxes)))]
+                got = cutout(sub, 0, lo, hi)
+                want = vol[tuple(slice(l, h) for l, h in zip(lo, hi))]
+                if not np.array_equal(got, want):
+                    errors.append((lo, hi))
+                    return
+                if rng.integers(0, 4) == 0:  # periodically go cold again
+                    for node in sub.nodes:
+                        if node.cache is not None:
+                            node.cache.clear()
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=reader, args=(31 + i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        sub.rebalance(target=4)
+        sub.rebalance(target=3)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    assert not errors, errors[:3]
+    assert not any(t.is_alive() for t in threads), "reader deadlocked"
+    for lo, hi in boxes:
+        np.testing.assert_array_equal(
+            cutout(sub, 0, lo, hi),
+            vol[tuple(slice(l, h) for l, h in zip(lo, hi))])
+    sub.close()
+
+
+# -- satellite: zero-copy aligned cutouts ----------------------------------
+
+def test_aligned_cutout_is_zero_copy():
+    vol = volume(seed=19)
+    store = CuboidStore(spec(), decode_policy=SERIAL)
+    ingest(store, 0, vol)
+    stats = CutoutStats()
+    out = cutout(store, 0, (8, 8, 4), (24, 24, 12), stats=stats)
+    np.testing.assert_array_equal(out, vol[8:24, 8:24, 4:12])
+    assert stats.zero_copy == 1
+    assert stats.bytes_discarded == 0
+    assert out.base is None  # the assembly buffer itself, not a trim copy
+    assert out.flags.c_contiguous
+
+
+def test_unaligned_cutout_still_copies():
+    vol = volume(seed=19)
+    store = CuboidStore(spec(), decode_policy=SERIAL)
+    ingest(store, 0, vol)
+    stats = CutoutStats()
+    out = cutout(store, 0, (7, 8, 4), (24, 24, 12), stats=stats)
+    np.testing.assert_array_equal(out, vol[7:24, 8:24, 4:12])
+    assert stats.zero_copy == 0
+    assert stats.bytes_discarded > 0
+    assert out.flags.c_contiguous
+
+
+# -- satellite: batch_cutout overlap ---------------------------------------
+
+def test_batch_cutout_overlaps_and_matches():
+    vol = volume(seed=23)
+    sub = ClusterStore(spec(), n_nodes=2, decode_policy=PARALLEL)
+    ingest(sub, 0, vol)
+    ref = reference(vol)
+    boxes = seeded_boxes(5, seed=29)
+    try:
+        got = batch_cutout(sub, 0, boxes)
+        assert len(got) == len(boxes)
+        for (lo, hi), arr in zip(boxes, got):
+            np.testing.assert_array_equal(arr, cutout_loop(ref, 0, lo, hi))
+        # single stores have no request pool and stay serial — same answers
+        got_single = batch_cutout(ref, 0, boxes)
+        for a, b in zip(got, got_single):
+            np.testing.assert_array_equal(a, b)
+    finally:
+        sub.close()
+
+
+def test_batch_cutout_serial_cluster():
+    """max_workers=0 disables request parallelism; results unchanged."""
+    vol = volume(seed=23)
+    sub = ClusterStore(spec(), n_nodes=2, max_workers=0,
+                       decode_policy=SERIAL)
+    ingest(sub, 0, vol)
+    boxes = seeded_boxes(3, seed=29)
+    ref = reference(vol)
+    try:
+        for (lo, hi), arr in zip(boxes, batch_cutout(sub, 0, boxes)):
+            np.testing.assert_array_equal(arr, cutout_loop(ref, 0, lo, hi))
+    finally:
+        sub.close()
+
+
+# -- satellite: codec level plumbing ---------------------------------------
+
+def test_compress_level_spec_field():
+    flat = np.zeros(SHAPE, dtype=np.uint8)
+    flat[:16] = 7  # very compressible
+    stored = {}
+    for level in (0, 9):
+        store = CuboidStore(spec(compress_level=level))
+        assert store.compression_level == level
+        ingest(store, 0, flat)
+        stored[level] = store.storage_bytes()
+    assert stored[9] < stored[0]  # level really reached the codec
+
+
+def test_compress_level_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_COMPRESS_LEVEL", "6")
+    store = CuboidStore(spec(compress_level=1))
+    assert store.compression_level == 6
+    # explicit constructor arg beats both env and spec
+    store = CuboidStore(spec(compress_level=1), compression_level=2)
+    assert store.compression_level == 2
+
+
+def test_decode_policy_env_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_DECODE_WORKERS", "5")
+    monkeypatch.setenv("REPRO_PREFETCH_SEGMENTS", "3")
+    pol = DecodePolicy.from_env()
+    assert pol.workers == 5
+    assert pol.prefetch_segments == 3
+    store = CuboidStore(spec())
+    assert store.decode_policy.workers == 5
+    cluster = ClusterStore(spec(), n_nodes=2)
+    try:
+        assert all(n.decode_policy.workers == 5 for n in cluster.nodes)
+    finally:
+        cluster.close()
+
+
+# -- prefetch: admission guard + counters ----------------------------------
+
+def test_prefetch_admission_never_evicts():
+    cache = CuboidCache(max_bytes=2048, segment_bits=2)
+    hot = [(0, 0, m) for m in range(4)]
+    for key in hot:
+        cache.put(key, b"x" * 128)
+    resident = cache.bytes
+    # a "giant scan" prefetch: far larger than the whole budget
+    items = [((0, 0, 64 + m), b"y" * 256) for m in range(64)]
+    admitted, rejected = cache.put_prefetched(items)
+    assert rejected > 0
+    assert cache.bytes <= cache.max_bytes
+    assert cache.counters()["prefetch_rejected"] == rejected
+    # every hot key survived: prefetch only filled the spare budget
+    for key in hot:
+        assert cache.probe(key)[0]
+    assert cache.bytes >= resident
+
+
+def test_prefetched_segments_evict_first():
+    """Untouched prefetched segments sit at the LRU end: the next normal
+    insert pressure drops them before any real resident segment."""
+    cache = CuboidCache(max_bytes=4096, segment_bits=1)
+    cache.put((0, 0, 0), b"h" * 512)  # hot resident
+    admitted, _ = cache.put_prefetched([((0, 0, 32), b"p" * 512)])
+    assert admitted == 1
+    # normal inserts push just past the budget: the first eviction must
+    # eat the prefetched segment, not any real resident
+    m = 2
+    while cache.evictions == 0 and m < 64:
+        cache.put((0, 0, m), b"n" * 512)
+        m += 2
+    assert cache.evictions > 0
+    assert not cache.probe((0, 0, 32))[0]  # prefetched dropped first
+    assert cache.probe((0, 0, 0))[0]       # hot key survived
+
+
+def test_prefetch_hit_counted_once():
+    cache = CuboidCache(max_bytes=64 << 10)
+    cache.put_prefetched([((0, 0, 1), b"z" * 64)])
+    assert cache.counters()["prefetch_insertions"] == 1
+    hit, blob = cache.get_blob((0, 0, 1))
+    assert hit and blob == b"z" * 64
+    cache.get_blob((0, 0, 1))
+    assert cache.counters()["prefetch_hits"] == 1  # first touch only
+
+
+def test_prefetch_pipeline_populates_cache_and_counters():
+    vol = volume(seed=37)
+    store = CuboidStore(spec(), decode_policy=PIPELINED)
+    attach_cache(store, 64 << 20)
+    ingest(store, 0, vol)
+    store.cache.clear()
+    lo, hi = (8, 8, 0), (32, 32, 16)  # multi-run schedule
+    plan = plan_cutout(store.spec.grid(0), 0, lo, hi)
+    assert len(plan.runs) > 1
+    np.testing.assert_array_equal(cutout(store, 0, lo, hi),
+                                  vol[8:32, 8:32, 0:16])
+    assert store.read_stats.prefetch_issued > 0
+    # the counters surface through the stats dataclass (GET /stats body)
+    snap = store.read_stats.snapshot()
+    assert snap.prefetch_issued == store.read_stats.prefetch_issued
+
+
+def test_stats_verb_surfaces_decode_and_prefetch():
+    from repro.cluster import VolumeService, dispatch
+
+    vol = volume(seed=41)
+    service = VolumeService()
+    cluster = ClusterStore(spec(), n_nodes=2, cache_bytes=1 << 20,
+                           decode_policy=PIPELINED)
+    ingest(cluster, 0, vol)
+    for node in cluster.nodes:
+        node.cache.clear()
+    service.add_dataset("ds", cluster)
+    try:
+        resp = dispatch(service, {"verb": "GET /cutout", "dataset": "ds",
+                                  "lo": (8, 8, 0), "hi": (32, 32, 16)})
+        assert resp["status"] == 200
+        assert resp["zero_copy"] is True
+        stats = dispatch(service, {"verb": "GET /stats", "dataset": "ds"})
+        assert stats["status"] == 200
+        assert stats["read"]["decoded_blocks"] > 0
+        assert "prefetch_issued" in stats["read"]
+        assert "prefetch_hits" in stats["cache"]
+        assert stats["decode"] == {"workers": 4, "chunk": 2,
+                                   "prefetch_segments": 2}
+    finally:
+        cluster.close()
+
+
+def test_prefetch_handoff_when_admission_rejected():
+    """A cache too small to admit prefetched blobs still gets correct
+    pipelined reads: the foreground consumes the prefetcher's fetched
+    blobs directly (the handoff) instead of refetching or stalling."""
+    vol = volume(seed=47)
+    store = CuboidStore(spec(), decode_policy=DecodePolicy(
+        workers=2, chunk=2, prefetch_segments=2))
+    cache = attach_cache(store, 2048)  # a few entries at most
+    ingest(store, 0, vol)
+    cache.clear()
+    lo, hi = (8, 8, 0), (32, 32, 16)  # multi-run schedule
+    for _ in range(3):
+        cache.clear()
+        np.testing.assert_array_equal(cutout(store, 0, lo, hi),
+                                      vol[8:32, 8:32, 0:16])
+    assert store.read_stats.prefetch_issued > 0
+    rs = store.read_stats
+    assert rs.reads + store.write_stats.reads == \
+        rs.cache_hits + rs.cache_misses  # invariant survives the handoff
+
+
+def test_write_behind_pending_beats_prefetch():
+    """A write pending in the write-behind queue is never masked by a
+    racing prefetch admitting the (stale) backend value."""
+    vol = volume(seed=43)
+    store = CuboidStore(spec(), backend=MemoryBackend(),
+                        decode_policy=PIPELINED)
+    attach_cache(store, 64 << 20)
+    from repro.cluster import enable_write_behind
+    enable_write_behind(store, max_items=256)
+    ingest(store, 0, vol)
+    store.flush()
+    store.cache.clear()
+    block = np.full(CUBOID, 211, dtype=np.uint8)
+    store.write_cuboid(0, 0, block)  # pending in the queue + cache
+    np.testing.assert_array_equal(store.read_cuboid(0, 0), block)
+    cutout(store, 0, (0, 0, 0), SHAPE)  # prefetch fires mid-read
+    np.testing.assert_array_equal(store.read_cuboid(0, 0), block)
+    store.close()
