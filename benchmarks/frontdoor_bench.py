@@ -1,0 +1,211 @@
+"""HTTP front-door benchmarks (the paper's Web-services tier on a socket).
+
+Three stories, all over a real ephemeral-port `ThreadingHTTPServer`:
+
+  * ``req/s under the admission limiter``: concurrent clients hammer
+    small cutout GETs; rows report sustained requests/s, how many rode a
+    coalesced batch, and how many were shed (503) — the front door must
+    degrade by refusing, not by collapsing.
+  * ``during-failover read latency``: reader threads sample cutouts over
+    HTTP while ``DELETE /nodes/<i>`` decommissions a live owner of a
+    replication-2 cluster; rows report baseline vs during-failover
+    latency and ``lost_reads`` (non-200 or bit-different responses —
+    must be 0).
+  * ``wire overhead``: the same cutout in-process vs over HTTP (raw and
+    zlib), isolating serialization + socket cost.
+
+``BENCH_PRESET=tiny`` shrinks volumes for the CI smoke job.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import urllib.request
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import ClusterStore, VolumeService
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+from repro.serve.http_front import FrontDoor
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    return (64, 64, 32) if preset() == "tiny" else (128, 128, 64)
+
+
+def _spec(shape):
+    return DatasetSpec(name="frontdoor_bench", volume_shape=shape,
+                       dtype="uint8", base_cuboid=(16, 16, 8))
+
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=30) as resp:
+        return resp.status, dict(resp.headers), resp.read()
+
+
+def _boxes(shape, n, size, seed=23):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        lo = [int(rng.integers(0, s - size)) for s in shape]
+        out.append((lo, [l + size for l in lo]))
+    return out
+
+
+def _box_url(base, lo, hi):
+    box = "/".join(f"{a},{b}" for a, b in zip(lo, hi))
+    return f"{base}/frontdoor/cutout/0/{box}"
+
+
+def throughput_rows() -> List[Dict]:
+    shape = _shape()
+    vol = np.random.default_rng(3).integers(1, 255, size=shape,
+                                            dtype=np.uint8)
+    store = ClusterStore(_spec(shape), n_nodes=2, replication=2,
+                         cache_bytes=32 << 20)
+    ingest(store, 0, vol)
+    service = VolumeService()
+    service.add_dataset("frontdoor", store)
+    n_clients = 4 if preset() == "tiny" else 8
+    n_reqs = 20 if preset() == "tiny" else 60
+    boxes = _boxes(shape, 12, size=16)
+    rows: List[Dict] = []
+    with FrontDoor(service) as door:
+        failures = [0]
+
+        def client(tid):
+            rng = np.random.default_rng(60 + tid)
+            for _ in range(n_reqs):
+                lo, hi = boxes[int(rng.integers(0, len(boxes)))]
+                status, _h, _p = _get(_box_url(door.url, lo, hi))
+                if status != 200:
+                    failures[0] += 1
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        dt = time.perf_counter() - t0
+        counters = door.counters()
+        total = n_clients * n_reqs
+        rows.append({
+            "name": f"frontdoor/req_s/{shape[0]}",
+            "us_per_call": dt / total * 1e6,
+            "derived": (f"{total / dt:.0f}req_s;{n_clients}clients"
+                        f";admit={door.admit_limit}"
+                        f";coalesced={counters.get('coalesced', 0)}"
+                        f";shed={counters['shed']}"
+                        f";failures={failures[0]}")})
+
+        # wire overhead: one box, in-process vs raw HTTP vs zlib HTTP
+        lo, hi = boxes[0]
+        reps = 10 if preset() == "tiny" else 30
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            cutout(store, 0, lo, hi)
+        t_proc = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _get(_box_url(door.url, lo, hi))
+        t_raw = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _get(_box_url(door.url, lo, hi) + "?encode=zlib")
+        t_zlib = (time.perf_counter() - t0) / reps
+        rows.append({
+            "name": f"frontdoor/wire_overhead/{shape[0]}",
+            "us_per_call": (t_raw - t_proc) * 1e6,
+            "derived": (f"inproc={t_proc * 1e6:.0f}us"
+                        f";http_raw={t_raw * 1e6:.0f}us"
+                        f";http_zlib={t_zlib * 1e6:.0f}us")})
+    store.close()
+    return rows
+
+
+def failover_rows() -> List[Dict]:
+    shape = _shape()
+    vol = np.random.default_rng(5).integers(1, 255, size=shape,
+                                            dtype=np.uint8)
+    store = ClusterStore(_spec(shape), n_nodes=3, replication=2)
+    ingest(store, 0, vol)
+    store.flush()
+    service = VolumeService()
+    service.add_dataset("frontdoor", store)
+    boxes = _boxes(shape, 8, size=8, seed=71)
+    with FrontDoor(service) as door:
+        # baseline latency against the steady 3-node topology
+        samples_before: List[float] = []
+        for lo, hi in boxes:
+            t0 = time.perf_counter()
+            _get(_box_url(door.url, lo, hi))
+            samples_before.append(time.perf_counter() - t0)
+
+        samples_during: List[float] = []
+        lost = [0]
+        stop = threading.Event()
+        lock = threading.Lock()
+
+        def reader(seed):
+            rng = np.random.default_rng(seed)
+            while not stop.is_set():
+                lo, hi = boxes[int(rng.integers(0, len(boxes)))]
+                t0 = time.perf_counter()
+                try:
+                    status, headers, payload = _get(_box_url(door.url, lo, hi))
+                except Exception:
+                    status, payload = 0, b""
+                dt = time.perf_counter() - t0
+                ok = status == 200
+                if ok:
+                    got = np.frombuffer(
+                        payload, dtype=headers["X-Dtype"]).reshape(
+                        tuple(int(s) for s in headers["X-Shape"].split(",")))
+                    sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+                    ok = np.array_equal(got, vol[sl])
+                with lock:
+                    samples_during.append(dt)
+                    if not ok:
+                        lost[0] += 1
+
+        threads = [threading.Thread(target=reader, args=(81 + i,))
+                   for i in range(2)]
+        for t in threads:
+            t.start()
+        t0 = time.perf_counter()
+        req = urllib.request.Request(f"{door.url}/frontdoor/nodes/1",
+                                     method="DELETE")
+        with urllib.request.urlopen(req, timeout=300) as resp:
+            assert json.loads(resp.read())["n_nodes"] == 2
+        t_failover = time.perf_counter() - t0
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    store.close()
+    mean_before = float(np.mean(samples_before))
+    mean_during = float(np.mean(samples_during)) if samples_during \
+        else mean_before
+    return [
+        {"name": f"frontdoor/failover/{shape[0]}",
+         "us_per_call": t_failover * 1e6,
+         "derived": "remove_node_live_owner;replication=2"},
+        {"name": f"frontdoor/read_during_failover/{shape[0]}",
+         "us_per_call": mean_during * 1e6,
+         "derived": (f"{mean_during / mean_before:.2f}x_vs_baseline"
+                     f";{len(samples_during)}samples"
+                     f";lost_reads={lost[0]}")},
+    ]
+
+
+def rows() -> List[Dict]:
+    return throughput_rows() + failover_rows()

@@ -54,7 +54,7 @@ def main(argv=None) -> None:
         os.environ["BENCH_PRESET"] = args.preset
 
     from . import (cache_bench, cluster_bench, coldread_bench, figs,
-                   kernels_bench, rebalance_bench)
+                   frontdoor_bench, kernels_bench, rebalance_bench)
 
     sections = [
         ("fig10", figs.fig10_cutout_throughput),
@@ -65,6 +65,7 @@ def main(argv=None) -> None:
         ("cache", cache_bench.rows),
         ("coldread", coldread_bench.rows),
         ("rebalance", rebalance_bench.rows),
+        ("frontdoor", frontdoor_bench.rows),
         ("curves", kernels_bench.curve_panel_traffic),
         ("attn", kernels_bench.attention_paths),
         ("ssd", kernels_bench.ssd_duality),

@@ -335,6 +335,29 @@ class CuboidCache:
             for key in keys:
                 self._invalidate_locked(key)
 
+    def invalidate_range(self, r: int, start: int, stop: int) -> None:
+        """Drop every cached entry — blobs *and* cached absences, every
+        channel — for morton indexes in ``[start, stop)`` at resolution
+        ``r``.  This is the replica-membership invalidation: when a node
+        leaves a range's replica set, any entry it cached for the range
+        (including "known absent" markers) describes data it no longer
+        holds, so the whole range must go, not just the keys currently
+        stored."""
+        if start >= stop:
+            return
+        with self._lock:
+            span = 1 << self.segment_bits
+            for sk in list(self._segments):
+                seg_r, _c, seg_m = sk
+                if seg_r != r:
+                    continue
+                base = seg_m << self.segment_bits
+                if base >= stop or base + span <= start:
+                    continue
+                seg = self._segments[sk]
+                for key in [k for k in seg.entries if start <= k[2] < stop]:
+                    self._invalidate_locked(key)
+
     def clear(self) -> None:
         with self._lock:
             self._segments.clear()

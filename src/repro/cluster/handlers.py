@@ -43,7 +43,8 @@ from typing import Any, Callable, Dict, Optional
 import numpy as np
 
 from ..core.annotations import AnnotationProject
-from ..core.cutout import CutoutStats, cutout, project, write_cutout
+from ..core.cutout import CutoutStats, batch_cutout, cutout, project, write_cutout
+from .store import RebalanceInFlight
 
 Request = Dict[str, Any]
 Response = Dict[str, Any]
@@ -73,14 +74,36 @@ class VolumeService:
 
 
 def _error(status: int, message: str) -> Response:
+    """The uniform error envelope: ``{"status": 4xx/5xx, "error": msg}``.
+
+    Every handler returns ``{"status": 200, ...}`` on success and this
+    shape otherwise — 404 unknown dataset/project/object, 400 malformed
+    request, 409 topology change in flight, 405 unknown verb (503 is the
+    transport layer's: the HTTP front door sheds with it when the
+    admission limit is exceeded)."""
     return {"status": status, "error": message}
 
 
-def _encode_volume(vol: np.ndarray, request: Request) -> Response:
+def _zlib_level(request: Request, store=None) -> int:
+    """Negotiated zlib level: explicit request ``level`` wins, else the
+    dataset's ``DatasetSpec.compress_level``, else 1 (wire default)."""
+    level = request.get("level")
+    if level is None:
+        spec = getattr(store, "spec", None)
+        level = getattr(spec, "compress_level", 1)
+    level = int(level)
+    if not (0 <= level <= 9):
+        raise ValueError(f"zlib level {level} outside [0, 9]")
+    return level
+
+
+def _encode_volume(vol: np.ndarray, request: Request, store=None) -> Response:
     body: Response = {"status": 200, "shape": tuple(vol.shape), "dtype": str(vol.dtype)}
     if request.get("encode") == "zlib":
-        body["data"] = zlib.compress(np.ascontiguousarray(vol).tobytes(), 1)
+        level = _zlib_level(request, store)
+        body["data"] = zlib.compress(np.ascontiguousarray(vol).tobytes(), level)
         body["encode"] = "zlib"
+        body["level"] = level
     else:
         body["data"] = vol
     return body
@@ -114,9 +137,9 @@ def get_cutout(service: VolumeService, request: Request) -> Response:
         lo, hi = _box(request)
         stats = CutoutStats()
         vol = cutout(store, r, lo, hi, channel=int(request.get("channel", 0)), stats=stats)
+        body = _encode_volume(vol, request, store)
     except _BAD_REQUEST as e:
         return _error(400, f"bad cutout request: {e}")
-    body = _encode_volume(vol, request)
     body["cuboids_read"] = stats.cuboids_read
     body["runs"] = stats.runs
     body["zero_copy"] = bool(stats.zero_copy)  # aligned: no trim copy made
@@ -165,9 +188,9 @@ def get_projection(service: VolumeService, request: Request) -> Response:
             reduce=request.get("reduce", "slice"),
             channel=int(request.get("channel", 0)),
         )
+        return _encode_volume(tile, request, store)
     except _BAD_REQUEST as e:
         return _error(400, f"bad projection request: {e}")
-    return _encode_volume(tile, request)
 
 
 def get_annotation_bbox(service: VolumeService, request: Request) -> Response:
@@ -199,9 +222,9 @@ def get_object_cutout(service: VolumeService, request: Request) -> Response:
         if "lo" in request and "hi" in request:
             box = _box(request)
         lo, vol = proj.object_cutout(ann_id, r, box)
+        body = _encode_volume(vol, request)
     except _BAD_REQUEST as e:
         return _error(400, f"bad object cutout request: {e}")
-    body = _encode_volume(vol, request)
     body["id"] = ann_id
     body["lo"] = list(lo)
     return body
@@ -298,9 +321,76 @@ def post_rebalance(service: VolumeService, request: Request) -> Response:
         return _error(400, "dataset is not elastic (single-node store)")
     try:
         target = request.get("target")
-        stats = store.rebalance(target=None if target is None else int(target))
+        stats = store.rebalance(target=None if target is None else int(target), wait=False)
+    except RebalanceInFlight as e:
+        return _error(409, str(e))
     except _BAD_REQUEST as e:
         return _error(400, f"bad rebalance request: {e}")
+    return {"status": 200, **stats, "topology": store.topology()}
+
+
+def post_batch_cutout(service: VolumeService, request: Request) -> Response:
+    """``POST /batch/cutout`` — many boxes in one request (paper §4.2's
+    batch interface on the wire).
+
+    ``{"boxes": [[lo, hi], ...]}`` at one resolution/channel; boxes
+    overlap on the cluster's request-level pool.  The response carries one
+    result envelope per box, in request order, each shaped exactly like a
+    ``GET /cutout`` body (``encode``/``level`` negotiate zlib per the
+    whole batch)."""
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    try:
+        r = int(request.get("resolution", 0))
+        channel = int(request.get("channel", 0))
+        boxes = []
+        for box in request["boxes"]:
+            lo, hi = box
+            boxes.append(([int(x) for x in lo], [int(x) for x in hi]))
+        if not boxes:
+            raise ValueError("empty boxes list")
+        vols = batch_cutout(store, r, boxes, channel)
+        results = [_encode_volume(vol, request, store) for vol in vols]
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad batch cutout request: {e}")
+    return {"status": 200, "n": len(results), "results": results}
+
+
+def post_add_node(service: VolumeService, request: Request) -> Response:
+    """``POST /nodes`` — grow the cluster by one shard (keys migrate onto
+    it immediately unless ``{"rebalance": false}``)."""
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    if not hasattr(store, "add_node"):
+        return _error(400, "dataset is not elastic (single-node store)")
+    try:
+        index = store.add_node(rebalance=bool(request.get("rebalance", True)), wait=False)
+    except RebalanceInFlight as e:
+        return _error(409, str(e))
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad add-node request: {e}")
+    return {"status": 200, "node": index, "topology": store.topology()}
+
+
+def post_remove_node(service: VolumeService, request: Request) -> Response:
+    """``DELETE /<dataset>/nodes/<i>`` — decommission a live shard.
+
+    Its ranges are promoted onto surviving replicas (replicated cluster)
+    or streamed off first (replication 1); zero keys are lost either
+    way."""
+    store = service.datasets.get(request.get("dataset"))
+    if store is None:
+        return _error(404, f"unknown dataset {request.get('dataset')!r}")
+    if not hasattr(store, "remove_node"):
+        return _error(400, "dataset is not elastic (single-node store)")
+    try:
+        stats = store.remove_node(int(request["node"]), wait=False)
+    except RebalanceInFlight as e:
+        return _error(409, str(e))
+    except _BAD_REQUEST as e:
+        return _error(400, f"bad remove-node request: {e}")
     return {"status": 200, **stats, "topology": store.topology()}
 
 
@@ -310,15 +400,25 @@ HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
     "GET /projection": get_projection,
     "GET /objects/boundingbox": get_annotation_bbox,
     "GET /objects/cutout": get_object_cutout,
+    "POST /batch/cutout": post_batch_cutout,
     "POST /flush": post_flush,
     "GET /stats": get_stats,
     "GET /topology": get_topology,
     "POST /rebalance": post_rebalance,
+    "POST /nodes/add": post_add_node,
+    "POST /nodes/remove": post_remove_node,
 }
 
 
 def dispatch(service: VolumeService, request: Request, verb: Optional[str] = None) -> Response:
-    """Route one request dict by its ``verb`` key (stateless: any caller)."""
+    """Route one request dict by its ``verb`` key.
+
+    .. deprecated::
+        This flat verb-string table predates the URL router; new callers
+        should parse paper-style paths with :func:`repro.cluster.api.url_dispatch`
+        (which resolves to these same handlers).  Kept as a thin shim so
+        existing request-dict callers keep working unchanged.
+    """
     verb = verb or request.get("verb")
     handler = HANDLERS.get(verb)
     if handler is None:

@@ -43,15 +43,26 @@ class Router:
     immutable — rebalancing derives a new one via :meth:`with_partitions`
     and publishes it atomically, so every request evaluates one consistent
     boundary set end to end.
+
+    ``replication`` is the requested copies-per-segment: segment ``i`` is
+    held by the replica set ``(i, i+1, ..., i+R-1) mod n_nodes`` (a
+    successor ring over the node indices, capped at ``n_nodes``).  The
+    first member is the *primary* — the segment's partition owner — and
+    write fan-out targets every member while reads may pick any.  Like
+    ownership itself, the replica set is a pure function of the router, so
+    any stateless front-end resolves it identically.
     """
 
     spec: DatasetSpec
     n_nodes: int
     partitions: Mapping[int, Partition] = dataclasses.field(default_factory=dict)
+    replication: int = 1
 
     def __post_init__(self):
         if self.n_nodes <= 0:
             raise ValueError("n_nodes must be positive")
+        if self.replication <= 0:
+            raise ValueError("replication must be positive")
         for r, part in self.partitions.items():
             if part.n_parts != self.n_nodes:
                 raise ValueError(
@@ -60,6 +71,21 @@ class Router:
 
     def n_cells(self, r: int) -> int:
         return self.spec.grid(r).n_cells
+
+    @property
+    def n_replicas(self) -> int:
+        """Effective copies per segment (capped: a 2-node cluster can hold
+        at most 2 distinct copies however large the requested factor)."""
+        return min(self.replication, self.n_nodes)
+
+    def replicas_of(self, primary: int) -> Tuple[int, ...]:
+        """The replica set of the segment owned by ``primary``: the
+        successor ring starting at the primary."""
+        return tuple((primary + k) % self.n_nodes for k in range(self.n_replicas))
+
+    def replica_set(self, r: int, m: int) -> Tuple[int, ...]:
+        """Every node holding morton index ``m`` (primary first)."""
+        return self.replicas_of(self.owner(r, m))
 
     def partition(self, r: int) -> Partition:
         """The explicit curve partition at resolution ``r``."""
@@ -74,7 +100,12 @@ class Router:
         """A new Router with updated boundaries (rebalance publishes this)."""
         merged = dict(self.partitions)
         merged.update(partitions)
-        return Router(self.spec, self.n_nodes if n_nodes is None else n_nodes, merged)
+        return Router(
+            self.spec,
+            self.n_nodes if n_nodes is None else n_nodes,
+            merged,
+            self.replication,
+        )
 
     def segments(self, r: int) -> List[Tuple[int, int]]:
         """The curve partition at resolution ``r``: node i owns segment i."""
@@ -106,6 +137,17 @@ class Router:
             for node, a, b in part.split(start, stop):
                 by_node.setdefault(node, []).append((a, b))
         return by_node
+
+    def split_run_replicas(
+        self, r: int, start: int, stop: int
+    ) -> List[Tuple[Tuple[int, ...], int, int]]:
+        """Like :meth:`split_run`, but each piece carries its full replica
+        set: [(members, start, stop), ...] in curve order.  A replicated
+        read picks any one member per piece; pieces stay whole so
+        node-local I/O stays sequential whichever member serves them."""
+        return [
+            (self.replicas_of(node), a, b) for node, a, b in self.partition(r).split(start, stop)
+        ]
 
     def group_cells(self, r: int, cells) -> Dict[int, np.ndarray]:
         """Group loose morton indexes by owning node (write routing)."""

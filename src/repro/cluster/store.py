@@ -10,30 +10,47 @@ unchanged over a cluster, and batch I/O fans out across nodes in parallel
 (one thread per touched node: the paper's parallel-requests doctrine C8
 applied *inside* one request).
 
+Replication (paper §4.2 "no single point of failure" applied to the data
+tier): ``replication=N`` keeps every curve segment on a *replica set* — a
+successor ring of N nodes starting at the segment's partition owner.
+Writes fan out to every member (each through its own write-behind queue),
+reads go to the least-loaded member (the per-node ``PathStats.inflight``
+gauge is the load signal), and removing a live member promotes the
+surviving replicas with zero data loss because every key already lives on
+all of them.
+
 Elasticity (paper §6 "dynamically redistribute data"): the cluster is not
 pinned to its initial shard count.  ``rebalance(target=...)`` re-cuts the
 per-resolution curve partitions by occupancy and migrates the keys whose
-owner changes *live* — concurrent reads and writes stay bit-identical
-throughout.  ``add_node()`` / ``remove_node()`` grow and shrink the node
-set through the same protocol.  The migration protocol, per segment move:
+*replica set* changes *live* — concurrent reads and writes stay
+bit-identical throughout.  ``add_node()`` / ``remove_node()`` grow and
+shrink the node set through the same protocol.  The migration protocol,
+per moved curve range:
 
-1. **register** — the move set is published and a grace period waits for
-   in-flight ops, so every subsequent write to a moving key *double-writes*
-   to both the old and the new owner (through each node's write-behind
-   queue when attached — the queue is the natural double-write buffer).
-2. **copy** — existing keys in the moving range are streamed from the old
-   owner to the new one as compressed blobs, in small batches under the
-   move lock, so a racing double-write can never be clobbered by a stale
-   copy.  Reads keep routing to the old owner, which stays complete.
-3. **swap** — a new Router (new `Partition` boundaries) is published
-   atomically; a grace period drains readers still on the old boundaries.
-4. **cleanup** — after a final writer grace period, moved keys are deleted
-   from the old owner and dropped from its `CuboidCache` (the new owner's
-   cache absorbed them during the copy).
+1. **register** — the move set (ranges whose membership changes) is
+   published and a grace period waits for in-flight ops, so every
+   subsequent write to a moving key *double-writes* to the old members
+   and every member being added (through each node's write-behind queue
+   when attached — the queue is the natural double-write buffer).
+2. **copy** — existing keys in the moving range are streamed from a
+   surviving old member to each added member as compressed blobs, in
+   small batches under the move lock, so a racing double-write can never
+   be clobbered by a stale copy.  Reads keep routing to the old members,
+   which stay complete.
+3. **swap** — the *final* topology (node tuple + Router) is published in
+   one atomic swap, so replica sets are never evaluated against a
+   half-migrated intermediate; a grace period drains readers still on the
+   old boundaries.
+4. **cleanup** — after a final writer grace period, keys leave the
+   members dropped from each range's set (backends and `CuboidCache`;
+   the added members' caches absorbed them during the copy).
 
 Topology (the node tuple + the Router) is an immutable snapshot swapped
 atomically, so every op sees one consistent (nodes, boundaries) pair even
-while a rebalance is in flight; `GET /topology` exposes it.
+while a rebalance is in flight; `GET /topology` exposes it.  During a
+grow, freshly appended shards ride in the node tuple *without* entering
+the Router until the final swap — they own nothing and serve nothing
+while the copy phase fills them.
 """
 
 from __future__ import annotations
@@ -57,8 +74,16 @@ from .router import Partition, Router
 
 NodeFactory = Callable[[int, DatasetSpec], CuboidStore]
 
-# (start, stop, src_node, dst_node) — one migrating curve segment.
-Move = Tuple[int, int, int, int]
+# (start, stop, old_members, new_members) — one curve range whose replica
+# set changes.  Node indices are *pre-migration* (physical) positions in
+# the topology the move set was computed against.
+Move = Tuple[int, int, Tuple[int, ...], Tuple[int, ...]]
+
+
+class RebalanceInFlight(RuntimeError):
+    """A topology change (rebalance / add_node / remove_node) is already
+    in progress.  Raised by ``rebalance(wait=False)`` and friends instead
+    of queueing behind the admin lock; the HTTP layer maps it to 409."""
 
 
 def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
@@ -69,7 +94,7 @@ def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
 # Gauges describe *current* per-node occupancy, not accumulated work:
 # summing them over-reports (a 2-node cluster would claim twice the real
 # queue peak), so the cluster aggregate takes the max instead.
-_GAUGE_FIELDS = frozenset({"queue_depth", "queue_peak"})
+_GAUGE_FIELDS = frozenset({"queue_depth", "queue_peak", "inflight"})
 
 
 def _sum_stats(parts: Sequence[PathStats]) -> PathStats:
@@ -133,12 +158,15 @@ class _OpGate:
                     raise TimeoutError("op gate synchronize timed out")
 
 
-def _move_dst(moves: Dict[int, Tuple[Move, ...]], r: int, m: int) -> Optional[int]:
-    """Destination node if (r, m) is currently migrating, else None."""
-    for start, stop, _, dst in moves.get(r, ()):
+def _move_extras(entries: Tuple[Move, ...], m: int, members: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Extra write targets while ``m``'s range is migrating: the members
+    being *added* that the writer's (pre-swap) replica set doesn't list.
+    Empty once the final topology is in the writer's snapshot — its
+    replica set already names every authoritative member."""
+    for start, stop, _old, new in entries:
         if start <= m < stop:
-            return dst
-    return None
+            return tuple(d for d in new if d not in members)
+    return ()
 
 
 class ClusterStore:
@@ -158,11 +186,20 @@ class ClusterStore:
     tier-1 with them set), and neither overrides a tier the node factory
     already attached.
 
+    ``replication`` keeps every curve segment on that many nodes (a
+    successor ring from the segment's owner, capped at the node count;
+    default from the ``REPRO_REPLICATION`` env knob, else 1).  Writes fan
+    out to every member; reads pick the member with the fewest in-flight
+    jobs; losing any single member loses no data while ``replication >=
+    2``.
+
     Elasticity: ``rebalance(target=n)`` / ``add_node()`` /
     ``remove_node()`` re-partition by occupancy (``keys_per_node()`` is
     the signal) and migrate keys live; see the module docstring for the
     coherence protocol.  ``topology()`` is the introspection snapshot the
-    ``GET /topology`` verb serves.
+    ``GET /topology`` verb serves.  Pass ``wait=False`` to fail fast with
+    :class:`RebalanceInFlight` instead of queueing behind a concurrent
+    topology change.
     """
 
     def __init__(
@@ -175,6 +212,7 @@ class ClusterStore:
         write_behind: Optional[bool] = None,
         write_behind_items: int = 512,
         decode_policy: Optional[DecodePolicy] = None,
+        replication: Optional[int] = None,
     ):
         self.spec = spec
         self._node_factory = node_factory or _default_node_factory
@@ -182,6 +220,9 @@ class ClusterStore:
             cache_bytes = int(os.environ.get("REPRO_CACHE_BYTES", "0") or 0) or None
         if write_behind is None:
             write_behind = os.environ.get("REPRO_WRITE_BEHIND", "0") not in ("", "0")
+        if replication is None:
+            replication = int(os.environ.get("REPRO_REPLICATION", "1") or 1)
+        self.replication = max(1, int(replication))
         self._node_cache_bytes = max(1, int(cache_bytes) // n_nodes) if cache_bytes else 0
         self._write_behind = bool(write_behind)
         self._write_behind_items = write_behind_items
@@ -192,7 +233,7 @@ class ClusterStore:
         # nodes on their own (env-derived) policy.
         self.decode_policy = decode_policy
         nodes = tuple(self._build_node(i) for i in range(n_nodes))
-        self._topo = _Topology(nodes, Router(spec, n_nodes))
+        self._topo = _Topology(nodes, Router(spec, n_nodes, replication=self.replication))
         self._gate = _OpGate()
         # Serializes whole rebalances; RLock so add/remove can nest into
         # rebalance().
@@ -200,9 +241,13 @@ class ClusterStore:
         # Serializes the copy phase with double-writes to *moving* keys so
         # a stale copy can never clobber a fresher concurrent write.
         self._move_lock = threading.Lock()
-        # {resolution: ((start, stop, src, dst), ...)} — published
-        # atomically; empty outside an active migration.
+        # {resolution: ((start, stop, old_members, new_members), ...)} —
+        # published atomically; empty outside an active migration.  Member
+        # indices are positions in `_moves_topo` (the pre-migration
+        # snapshot): a writer consults the move set only while its own
+        # topology snapshot IS that one, so the indices always line up.
         self._moves: Dict[int, Tuple[Move, ...]] = {}
+        self._moves_topo: Optional[_Topology] = None
         self._cfg_max_workers = max_workers
         self._retired_pools: List[cf.ThreadPoolExecutor] = []
         workers = n_nodes if max_workers is None else max_workers
@@ -285,39 +330,116 @@ class ClusterStore:
         futures = {n: pool.submit(job) for n, job in jobs.items()}
         return {n: f.result() for n, f in futures.items()}
 
+    # -- replica selection --------------------------------------------------
+    def _pick_replica(
+        self,
+        topo: _Topology,
+        members: Tuple[int, ...],
+        assigned: Optional[Dict[int, int]] = None,
+    ) -> int:
+        """Least-loaded member of a replica set (reads balance here).
+
+        Load is the node's ``PathStats.inflight`` gauge (cluster read jobs
+        it is serving *right now*) plus any pieces this caller already
+        assigned it, tie-broken by lifetime reads so an idle cluster still
+        round-robins instead of pinning the primary."""
+        if len(members) == 1:
+            return members[0]
+        best = members[0]
+        best_load = None
+        for i in members:
+            stats = topo.nodes[i].read_stats
+            load = (
+                stats.inflight + (assigned.get(i, 0) if assigned else 0),
+                stats.reads,
+                i,
+            )
+            if best_load is None or load < best_load:
+                best, best_load = i, load
+        return best
+
+    def _read_split(self, topo: _Topology, r: int, runs) -> Dict[int, List[Tuple[int, int]]]:
+        """Split runs at partition boundaries and route each piece to the
+        least-loaded member of its replica set."""
+        router = topo.router
+        if router.n_replicas == 1:
+            return router.split_runs(r, runs)
+        assigned: Dict[int, int] = {}
+        by_node: Dict[int, List[Tuple[int, int]]] = {}
+        for start, stop in runs:
+            for members, a, b in router.split_run_replicas(r, start, stop):
+                node = self._pick_replica(topo, members, assigned)
+                assigned[node] = assigned.get(node, 0) + 1
+                by_node.setdefault(node, []).append((a, b))
+        return by_node
+
+    @staticmethod
+    def _serving_job(node: CuboidStore, fn: Callable[[], object]) -> Callable[[], object]:
+        """Wrap a per-node read job so the node's inflight gauge tracks it
+        (the signal `_pick_replica` balances on)."""
+
+        def run():
+            with node.serving():
+                return fn()
+
+        return run
+
+    def _write_targets(self, topo: _Topology, r: int, m: int) -> Tuple[int, ...]:
+        """Every node a write to (r, m) must reach: the snapshot router's
+        replica set, plus members being added by an in-flight migration
+        (only meaningful against the pre-migration snapshot)."""
+        members = topo.router.replica_set(r, m)
+        if self._moves and topo is self._moves_topo:
+            extras = _move_extras(self._moves.get(r, ()), m, members)
+            if extras:
+                return members + extras
+        return members
+
     # -- single-cuboid ops (routed) ----------------------------------------
     def read_cuboid(self, r: int, m: int, channel: int = 0) -> np.ndarray:
         with self._gate.op():
             topo = self._topo
-            return topo.nodes[topo.router.owner(r, m)].read_cuboid(r, m, channel)
+            members = topo.router.replica_set(r, m)
+            node = topo.nodes[self._pick_replica(topo, members)]
+            with node.serving():
+                return node.read_cuboid(r, m, channel)
 
     def write_cuboid(self, r: int, m: int, data: np.ndarray, channel: int = 0) -> None:
         with self._gate.op():
             topo = self._topo
-            owner = topo.router.owner(r, m)
-            dst = _move_dst(self._moves, r, m) if self._moves else None
-            if dst is None or dst == owner:
-                topo.nodes[owner].write_cuboid(r, m, data, channel)
+            members = topo.router.replica_set(r, m)
+            targets = self._write_targets(topo, r, m)
+            if len(targets) == len(members):
+                for node in targets:
+                    topo.nodes[node].write_cuboid(r, m, data, channel)
             else:
-                # double-write: the segment is migrating owner -> dst;
-                # serialize with the copier so it can't overwrite us.
+                # double-write: the range is migrating and `targets` also
+                # names the members being added; serialize with the copier
+                # so a stale copy can't overwrite this write.
                 with self._move_lock:
-                    topo.nodes[owner].write_cuboid(r, m, data, channel)
-                    topo.nodes[dst].write_cuboid(r, m, data, channel)
+                    for node in targets:
+                        topo.nodes[node].write_cuboid(r, m, data, channel)
 
     def has_cuboid(self, r: int, m: int, channel: int = 0) -> bool:
         with self._gate.op():
             topo = self._topo
-            return topo.nodes[topo.router.owner(r, m)].has_cuboid(r, m, channel)
+            members = topo.router.replica_set(r, m)
+            return topo.nodes[members[0]].has_cuboid(r, m, channel)
 
     # -- batch ops (routed + parallel) -------------------------------------
     def read_run(self, r: int, start: int, stop: int, channel: int = 0) -> List[np.ndarray]:
-        """Run read in curve order, split at partition boundaries."""
+        """Run read in curve order, split at partition boundaries; each
+        piece is served by the least-loaded member of its replica set."""
         with self._gate.op():
             topo = self._topo
             out: List[np.ndarray] = []
-            for node, a, b in topo.router.split_run(r, start, stop):
-                out.extend(topo.nodes[node].read_run(r, a, b, channel))
+            assigned: Dict[int, int] = {}
+            for members, a, b in topo.router.split_run_replicas(r, start, stop):
+                idx = self._pick_replica(topo, members, assigned)
+                assigned[idx] = assigned.get(idx, 0) + 1
+                node = topo.nodes[idx]
+                with node.serving():
+                    out.extend(node.read_run(r, a, b, channel))
             return out
 
     def fetch_runs(
@@ -337,10 +459,13 @@ class ClusterStore:
         """
         with self._gate.op():
             topo = self._topo
-            by_node = topo.router.split_runs(r, list(runs))
+            by_node = self._read_split(topo, r, list(runs))
             jobs = {
-                node: functools.partial(
-                    topo.nodes[node].fetch_runs, r, node_runs, channel, decode=decode
+                node: self._serving_job(
+                    topo.nodes[node],
+                    functools.partial(
+                        topo.nodes[node].fetch_runs, r, node_runs, channel, decode=decode
+                    ),
                 )
                 for node, node_runs in by_node.items()
             }
@@ -367,10 +492,13 @@ class ClusterStore:
         """
         with self._gate.op():
             topo = self._topo
-            by_node = topo.router.split_runs(r, list(runs))
+            by_node = self._read_split(topo, r, list(runs))
             jobs = {
-                node: functools.partial(
-                    topo.nodes[node].fetch_blocks, r, node_runs, channel, sink=sink
+                node: self._serving_job(
+                    topo.nodes[node],
+                    functools.partial(
+                        topo.nodes[node].fetch_blocks, r, node_runs, channel, sink=sink
+                    ),
                 )
                 for node, node_runs in by_node.items()
             }
@@ -397,37 +525,45 @@ class ClusterStore:
         with self._batch_lock:
             if self._batch_pool is None:
                 self._batch_pool = cf.ThreadPoolExecutor(
-                    max_workers=min(8, max(2, len(self._topo.nodes))),
+                    max_workers=self.request_slots,
                     thread_name_prefix="ocp-batch",
                 )
             pool = self._batch_pool
         futures = [pool.submit(job) for job in jobs]
         return [f.result() for f in futures]
 
-    def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray], channel: int = 0) -> None:
-        """Batch write: group blocks by owner, write nodes in parallel.
+    @property
+    def request_slots(self) -> int:
+        """Concurrency of the request-level batch pool (`run_batch`) — the
+        admission signal an HTTP front door sizes its limiter from."""
+        if self._cfg_max_workers is not None and self._cfg_max_workers <= 1:
+            return 1
+        return min(8, max(2, len(self._topo.nodes)))
 
-        Blocks inside a migrating segment are written to *both* the old
-        and the new owner (under the move lock), keeping the destination
-        complete before the boundary swap makes it authoritative.
+    def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray], channel: int = 0) -> None:
+        """Batch write: group blocks by replica set, write nodes in
+        parallel (every member gets every block it holds).
+
+        Blocks inside a migrating range are *also* written to the members
+        being added (under the move lock), keeping them complete before
+        the topology swap makes them authoritative.
         """
         with self._gate.op():
             topo = self._topo
-            moves = self._moves.get(r, ()) if self._moves else ()
+            moves = self._moves.get(r, ()) if (self._moves and topo is self._moves_topo) else ()
             by_node: Dict[int, Dict[int, np.ndarray]] = {}
             doubling: Dict[int, Dict[int, np.ndarray]] = {}
             for m, data in blocks.items():
-                owner = topo.router.owner(r, m)
-                dst = None
-                if moves:
-                    dst = next((d for a, b, _, d in moves if a <= m < b), None)
-                if dst is not None and dst != owner:
-                    # migrating: double-write owner + dst under the move
-                    # lock (serialized with the copier)
-                    doubling.setdefault(owner, {})[m] = data
-                    doubling.setdefault(dst, {})[m] = data
+                members = topo.router.replica_set(r, m)
+                extras = _move_extras(moves, m, members) if moves else ()
+                if extras:
+                    # migrating: double-write members + added members under
+                    # the move lock (serialized with the copier)
+                    for node in members + extras:
+                        doubling.setdefault(node, {})[m] = data
                 else:
-                    by_node.setdefault(owner, {})[m] = data
+                    for node in members:
+                        by_node.setdefault(node, {})[m] = data
             if by_node:  # non-moving blocks never wait on the move lock
                 jobs = {
                     node: functools.partial(
@@ -451,13 +587,23 @@ class ClusterStore:
         """Introspection snapshot served by ``GET /topology``."""
         with self._gate.op():
             topo = self._topo
+            # Shards appended by a grow-in-progress (or add_node without a
+            # rebalance) ride outside the router: pad their segments empty
+            # so "node i owns segments[i]" holds for the whole node tuple.
+            n_pad = len(topo.nodes) - topo.router.n_nodes
+            segments = {}
+            for r in range(self.spec.n_resolutions):
+                segs = topo.router.segments(r)
+                if n_pad > 0:
+                    n_cells = topo.router.n_cells(r)
+                    segs = segs + [(n_cells, n_cells)] * n_pad
+                segments[r] = segs
             return {
                 "n_nodes": len(topo.nodes),
                 "elastic": True,
                 "rebalancing": bool(self._moves),
-                "segments": {
-                    r: topo.router.segments(r) for r in range(self.spec.n_resolutions)
-                },
+                "replication": topo.router.n_replicas,
+                "segments": segments,
                 "keys_per_node": self._key_counts(topo),
                 "cache_nodes": sum(1 for n in topo.nodes if n.cache is not None),
                 "write_behind_nodes": sum(
@@ -466,7 +612,10 @@ class ClusterStore:
             }
 
     def add_node(
-        self, node_factory: Optional[NodeFactory] = None, rebalance: bool = True
+        self,
+        node_factory: Optional[NodeFactory] = None,
+        rebalance: bool = True,
+        wait: bool = True,
     ) -> int:
         """Grow the cluster by one shard; returns the new node's index.
 
@@ -474,17 +623,30 @@ class ClusterStore:
         (occupancy-balanced); otherwise it joins owning nothing until the
         next ``rebalance()``.
         """
-        with self._admin_lock:
+        if not self._admin_lock.acquire(blocking=wait):
+            raise RebalanceInFlight("a topology change is already in flight")
+        try:
             index = self.n_nodes
             if rebalance:
                 self.rebalance(target=index + 1, node_factory=node_factory)
             else:
                 self._widen(index + 1, node_factory)
             return index
+        finally:
+            self._admin_lock.release()
 
-    def remove_node(self, node: int = -1) -> Dict[str, object]:
-        """Shrink the cluster: migrate ``node``'s keys off, then drop it."""
-        with self._admin_lock:
+    def remove_node(self, node: int = -1, wait: bool = True) -> Dict[str, object]:
+        """Shrink the cluster: drop ``node`` with zero data loss.
+
+        With ``replication >= 2`` every range the victim holds survives on
+        its other members, which are promoted in place; ranges where the
+        victim is the *only* member (replication 1) are streamed off it
+        first.  Either way the migration protocol keeps concurrent reads
+        and writes bit-identical throughout.
+        """
+        if not self._admin_lock.acquire(blocking=wait):
+            raise RebalanceInFlight("a topology change is already in flight")
+        try:
             topo = self._topo
             n = len(topo.nodes)
             if n <= 1:
@@ -493,25 +655,28 @@ class ClusterStore:
             if not (0 <= idx < n):
                 raise ValueError(f"node {node} out of range for {n} nodes")
             t0 = time.perf_counter()
-            # Target: node idx owns nothing; the survivors re-cut by
-            # occupancy.  Built by inserting a zero-span segment at idx
-            # into the (n-1)-way balanced bounds.
+            # The survivors re-cut by occupancy; the victim appears in no
+            # final replica set.  Final-router indices j map to physical
+            # node j (below the victim) or j+1 (above it).
             occupancy = self._occupancy(topo)
-            target_parts: Dict[int, Partition] = {}
-            final_parts: Dict[int, Partition] = {}
-            for r in range(self.spec.n_resolutions):
-                survivors = Partition.balanced(
-                    occupancy.get(r, ()), topo.router.n_cells(r), n - 1
-                )
-                b = survivors.bounds
-                target_parts[r] = Partition(b[: idx + 1] + (b[idx],) + b[idx + 1 :])
-                final_parts[r] = survivors
-            moved_keys, moved_bytes = self._migrate_live(topo, target_parts)
-            # Drop the (now empty) node from the topology, then let every
-            # in-flight op drain before closing it.
-            kept = topo.nodes[:idx] + topo.nodes[idx + 1 :]
-            self._swap_topo(_Topology(kept, Router(self.spec, n - 1, final_parts)))
-            self._gate.synchronize()
+            final_parts = {
+                r: Partition.balanced(occupancy.get(r, ()), topo.router.n_cells(r), n - 1)
+                for r in range(self.spec.n_resolutions)
+            }
+            final_router = Router(
+                self.spec, n - 1, final_parts, topo.router.replication
+            )
+            phys_of_final = [j if j < idx else j + 1 for j in range(n - 1)]
+            final_nodes = topo.nodes[:idx] + topo.nodes[idx + 1 :]
+            moved_keys, moved_bytes = self._migrate_live(
+                topo,
+                final_router,
+                phys_of_final,
+                final_nodes,
+                avoid_sources=frozenset({idx}),
+            )
+            # _migrate_live drained every op that could still hold the old
+            # snapshot; nothing references the victim now.
             topo.nodes[idx].close()
             return {
                 "n_nodes": n - 1,
@@ -520,22 +685,29 @@ class ClusterStore:
                 "moved_bytes": moved_bytes,
                 "seconds": time.perf_counter() - t0,
             }
+        finally:
+            self._admin_lock.release()
 
     def rebalance(
         self,
         target: Optional[int] = None,
         node_factory: Optional[NodeFactory] = None,
         batch_keys: int = 64,
+        wait: bool = True,
     ) -> Dict[str, object]:
         """Re-partition by occupancy and migrate keys live.
 
         ``target`` is the desired node count (default: keep the current
         one and only move boundaries).  Growth appends fresh shards first
-        (owning nothing), shrink drops the trailing shards after their
-        keys migrate off.  Returns migration stats; see the module
-        docstring for the coherence protocol.
+        (outside the router, owning nothing), shrink drops the trailing
+        shards after their keys migrate off.  ``wait=False`` raises
+        :class:`RebalanceInFlight` if another topology change holds the
+        admin lock.  Returns migration stats; see the module docstring
+        for the coherence protocol.
         """
-        with self._admin_lock:
+        if not self._admin_lock.acquire(blocking=wait):
+            raise RebalanceInFlight("a topology change is already in flight")
+        try:
             t0 = time.perf_counter()
             n_old = self.n_nodes
             n_new = n_old if target is None else int(target)
@@ -544,40 +716,38 @@ class ClusterStore:
             if n_new > n_old:
                 self._widen(n_new, node_factory)
             topo = self._topo
-            n_wide = len(topo.nodes)
             occupancy = self._occupancy(topo)
-            target_parts: Dict[int, Partition] = {}
-            final_parts: Dict[int, Partition] = {}
-            for r in range(self.spec.n_resolutions):
-                n_cells = topo.router.n_cells(r)
-                part = Partition.balanced(occupancy.get(r, ()), n_cells, n_new)
-                final_parts[r] = part
-                if n_wide > n_new:  # shrinking: trailing shards own nothing
-                    part = Partition(part.bounds + (n_cells,) * (n_wide - n_new))
-                target_parts[r] = part
+            final_parts = {
+                r: Partition.balanced(occupancy.get(r, ()), topo.router.n_cells(r), n_new)
+                for r in range(self.spec.n_resolutions)
+            }
+            final_router = Router(
+                self.spec, n_new, final_parts, topo.router.replication
+            )
+            final_nodes = topo.nodes[:n_new]
+            dropped = topo.nodes[n_new:]
             try:
                 moved_keys, moved_bytes = self._migrate_live(
-                    topo, target_parts, batch_keys=batch_keys
+                    topo,
+                    final_router,
+                    list(range(n_new)),
+                    final_nodes,
+                    batch_keys=batch_keys,
                 )
             except BaseException:
                 if n_new > n_old:
                     self._unwiden(n_old)
                 raise
-            if n_wide > n_new:
-                topo = self._topo
-                dropped = topo.nodes[n_new:]
-                self._swap_topo(
-                    _Topology(topo.nodes[:n_new], Router(self.spec, n_new, final_parts))
-                )
-                self._gate.synchronize()
-                for node in dropped:
-                    node.close()
+            for node in dropped:  # shrink: every op on the old snapshot drained
+                node.close()
             return {
                 "n_nodes": n_new,
                 "moved_keys": moved_keys,
                 "moved_bytes": moved_bytes,
                 "seconds": time.perf_counter() - t0,
             }
+        finally:
+            self._admin_lock.release()
 
     def _swap_topo(self, topo: _Topology) -> None:
         self._topo = topo  # atomic reference swap; ops snapshot it once
@@ -596,42 +766,32 @@ class ClusterStore:
             )
 
     def _widen(self, n_new: int, node_factory: Optional[NodeFactory]) -> None:
-        """Append fresh shards that own nothing: every resolution's
-        partition is pinned to its current bounds (+ empty tail segments),
-        so ownership is unchanged until a migration moves it."""
+        """Append fresh shards to the node tuple *without* touching the
+        Router: they own nothing and sit in no replica set until a
+        migration's final swap assigns them, so no intermediate router
+        (whose successor rings would differ from the final one) is ever
+        published."""
         topo = self._topo
-        n_old = len(topo.nodes)
         nodes = list(topo.nodes)
-        for i in range(n_old, n_new):
+        for i in range(len(nodes), n_new):
             nodes.append(self._build_node(i, node_factory))
-        pinned = {}
-        for r in range(self.spec.n_resolutions):
-            part = topo.router.partition(r)
-            pinned[r] = Partition(part.bounds + (part.n_cells,) * (n_new - n_old))
-        self._swap_topo(_Topology(tuple(nodes), Router(self.spec, n_new, pinned)))
+        self._swap_topo(_Topology(tuple(nodes), topo.router))
         self._gate.synchronize()  # all traffic now sees the widened topology
 
     def _unwiden(self, n_old: int) -> None:
         """Undo `_widen` after a failed grow-migration: drop the appended
-        shards again — but only while they still own nothing (the failed
-        migration never swapped ownership onto them; `_migrate_live`'s
-        rollback already wiped any blobs it landed there).  Without this,
-        every failed ``POST /rebalance`` would leak a set of phantom
-        nodes (threads, queues, caches) and misreport the cluster size."""
+        shards again — but only while the router never swapped (the failed
+        migration left ownership untouched; its rollback already wiped any
+        blobs landed on the new shards).  Without this, every failed
+        ``POST /rebalance`` would leak a set of phantom nodes (threads,
+        queues, caches) and misreport the cluster size."""
         topo = self._topo
-        tail_segments = [
-            seg
-            for r in range(self.spec.n_resolutions)
-            for seg in topo.router.segments(r)[n_old:]
-        ]
-        if any(a != b for a, b in tail_segments):
-            return  # ownership already moved; the widened nodes must stay
+        if topo.router.n_nodes > n_old:
+            return  # the final swap happened; the widened nodes must stay
         dropped = topo.nodes[n_old:]
-        parts = {
-            r: Partition(topo.router.partition(r).bounds[: n_old + 1])
-            for r in range(self.spec.n_resolutions)
-        }
-        self._swap_topo(_Topology(topo.nodes[:n_old], Router(self.spec, n_old, parts)))
+        if not dropped:
+            return
+        self._swap_topo(_Topology(topo.nodes[:n_old], topo.router))
         self._gate.synchronize()
         for node in dropped:
             try:
@@ -648,38 +808,89 @@ class ClusterStore:
                 occupancy.setdefault(r, []).append(m)
         return occupancy
 
+    def _replica_moves(
+        self,
+        topo: _Topology,
+        final_router: Router,
+        phys_of_final: Sequence[int],
+    ) -> Dict[int, Tuple[Move, ...]]:
+        """Diff replica-set membership between the current router and the
+        final one: {r: ((start, stop, old_members, new_members), ...)} for
+        every curve range whose set changes.  All indices are physical
+        positions in ``topo`` (final-router indices mapped through
+        ``phys_of_final``)."""
+        moves: Dict[int, Tuple[Move, ...]] = {}
+        for r in range(self.spec.n_resolutions):
+            old_part = topo.router.partition(r)
+            new_part = final_router.partition(r)
+            cuts = sorted(set(old_part.bounds) | set(new_part.bounds))
+            entries: List[Move] = []
+            for a, b in zip(cuts, cuts[1:]):
+                if a >= b:
+                    continue
+                old_m = topo.router.replicas_of(int(old_part.owner(a)))
+                new_m = tuple(
+                    phys_of_final[j] for j in final_router.replicas_of(int(new_part.owner(a)))
+                )
+                if set(old_m) == set(new_m):
+                    continue
+                prev = entries[-1] if entries else None
+                if prev is not None and prev[1] == a and prev[2:] == (old_m, new_m):
+                    entries[-1] = (prev[0], b, old_m, new_m)
+                else:
+                    entries.append((a, b, old_m, new_m))
+            if entries:
+                moves[r] = tuple(entries)
+        return moves
+
     def _migrate_live(
         self,
         topo: _Topology,
-        target_parts: Dict[int, Partition],
+        final_router: Router,
+        phys_of_final: Sequence[int],
+        final_nodes: Tuple[CuboidStore, ...],
         batch_keys: int = 64,
+        avoid_sources: frozenset = frozenset(),
     ) -> Tuple[int, int]:
-        """Move ownership from the current partitions to ``target_parts``
-        with zero lost or stale reads (the module-docstring protocol).
-        Returns (moved_keys, moved_bytes)."""
-        moves: Dict[int, Tuple[Move, ...]] = {}
-        for r, new_part in target_parts.items():
-            diff = tuple(topo.router.partition(r).moves(new_part))
-            if diff:
-                moves[r] = diff
-        if not moves:  # boundaries unchanged (or only empty ranges moved)
-            self._swap_topo(_Topology(topo.nodes, topo.router.with_partitions(target_parts)))
+        """Migrate from ``topo`` to the final (nodes, router) pair with
+        zero lost or stale reads (the module-docstring protocol).
+
+        ``phys_of_final[j]`` is final-router node ``j``'s position in
+        ``topo.nodes`` — the two differ when a mid-tuple node is being
+        removed.  ``avoid_sources`` are nodes the copy phase should not
+        stream from when any other old member holds the range (the
+        decommissioning victim).  Returns (moved_keys, moved_bytes),
+        counting one move per (key, added member) copy."""
+        moves = self._replica_moves(topo, final_router, phys_of_final)
+        final_topo = _Topology(tuple(final_nodes), final_router)
+        if not moves:  # membership unchanged (or only empty ranges moved)
+            self._swap_topo(final_topo)
+            self._gate.synchronize()
             return 0, 0
 
         # 1. register: publish the move set; once every in-flight op has
-        # drained, all writes to moving keys double-write.
+        # drained, all writes to moving keys double-write to the members
+        # being added.
         self._moves = moves
+        self._moves_topo = topo
         moved_keys = moved_bytes = 0
         swapped = False
         try:
             self._gate.synchronize()
-            src_nodes = {src for entries in moves.values() for _, _, src, _ in entries}
-            keys_by_src = {src: topo.nodes[src].stored_keys() for src in src_nodes}
-            # 2. copy: stream existing keys src -> dst in small batches
-            # under the move lock (serialized with double-writes so a
-            # stale copy can never overwrite a fresher concurrent write).
+            keys_by_src: Dict[int, List[Key]] = {}
+            # 2. copy: stream existing keys from a surviving old member to
+            # each added member, in small batches under the move lock
+            # (serialized with double-writes so a stale copy can never
+            # overwrite a fresher concurrent write).
             for r, entries in sorted(moves.items()):
-                for start, stop, src, dst in entries:
+                for start, stop, old_m, new_m in entries:
+                    added = [d for d in new_m if d not in old_m]
+                    if not added:
+                        continue
+                    srcs = [s for s in old_m if s not in avoid_sources] or list(old_m)
+                    src = srcs[0]
+                    if src not in keys_by_src:
+                        keys_by_src[src] = topo.nodes[src].stored_keys()
                     by_channel: Dict[int, List[int]] = {}
                     for kr, kc, km in keys_by_src[src]:
                         if kr == r and start <= km < stop:
@@ -693,72 +904,89 @@ class ClusterStore:
                                     r, morton.indices_to_runs(chunk), c
                                 )
                                 items = [((r, c, m), blobs.get(m)) for m in chunk]
-                                topo.nodes[dst].ingest_blobs(items)
-                            moved_keys += len(items)
-                            moved_bytes += sum(len(b) for _, b in items if b)
-            # 3. swap: the new boundaries become authoritative.  The move
-            # set must stay published until every op that resolved owners
-            # under the OLD router has drained — such a writer still
-            # single-routes to the old owner and relies on the move entry
-            # to double-write; retiring the set first would let its write
-            # land on the old owner alone and be destroyed by cleanup.
-            self._swap_topo(_Topology(topo.nodes, topo.router.with_partitions(target_parts)))
+                                for dst in added:
+                                    topo.nodes[dst].ingest_blobs(items)
+                            moved_keys += len(items) * len(added)
+                            moved_bytes += sum(len(b) for _, b in items if b) * len(added)
+            # 3. swap: the final topology becomes authoritative in ONE
+            # publication — replica rings are never evaluated against an
+            # intermediate node count.  The move set must stay published
+            # until every op that resolved membership under the OLD router
+            # has drained — such a writer still routes to the old members
+            # and relies on the move entry to also hit the added ones;
+            # retiring the set first would let its write miss a now-
+            # authoritative member.
+            self._swap_topo(final_topo)
             swapped = True
             self._gate.synchronize()
         finally:
             # 4. retire the move set, then drain writers that may still
             # be double-writing before any key is deleted.
             self._moves = {}
+            self._moves_topo = None
             self._gate.synchronize()
             if not swapped:
-                # A failed migration must not strand blobs on the
-                # destinations: the old boundaries stay authoritative, and
-                # anything landed on dst (copies *and* double-writes)
+                # A failed migration must not strand blobs on the added
+                # members: the old membership stays authoritative, and
+                # anything landed there (copies *and* double-writes)
                 # would resurrect as stale data when a later rebalance
-                # re-assigns the range.  Under the old bounds dst owns
-                # nothing inside a moved range and reads never routed
-                # there, so wiping the range is invisible.
+                # re-assigns the range.  Under the old router those nodes
+                # hold nothing inside a moved range and reads never
+                # routed there, so wiping the range is invisible.
                 self._rollback_destinations(topo, moves)
-        # cleanup: every key in a moved range (including ones double-written
-        # during the move) leaves the old owner's backends and cache.
-        ranges_by_src: Dict[int, List[Tuple[int, int, int]]] = {}
+        # cleanup: every key in a moved range (including ones double-
+        # written during the move) leaves the backends and cache of each
+        # member dropped from the range's set — the surviving/added
+        # members absorbed them already.
+        ranges_by_node: Dict[int, List[Tuple[int, int, int]]] = {}
         for r, entries in moves.items():
-            for start, stop, src, _dst in entries:
-                ranges_by_src.setdefault(src, []).append((r, start, stop))
-        for src, ranges in ranges_by_src.items():
-            node = topo.nodes[src]
-            stale = [
-                k
-                for k in node.stored_keys()
-                if any(k[0] == r and a <= k[2] < b for r, a, b in ranges)
-            ]
-            if stale:
-                node.ingest_blobs([(k, None) for k in stale])
-                if node.cache is not None:
-                    node.cache.invalidate_many(stale)
+            for start, stop, old_m, new_m in entries:
+                for node in old_m:
+                    if node not in new_m:
+                        ranges_by_node.setdefault(node, []).append((r, start, stop))
+        self._drop_ranges(topo, ranges_by_node, best_effort=False)
         return moved_keys, moved_bytes
 
-    @staticmethod
-    def _rollback_destinations(topo: _Topology, moves: Dict[int, Tuple[Move, ...]]) -> None:
+    @classmethod
+    def _rollback_destinations(
+        cls, topo: _Topology, moves: Dict[int, Tuple[Move, ...]]
+    ) -> None:
         """Best-effort: delete everything a failed migration landed on the
-        destination nodes (called after the move set is retired)."""
-        ranges_by_dst: Dict[int, List[Tuple[int, int, int]]] = {}
+        added members (called after the move set is retired)."""
+        ranges_by_node: Dict[int, List[Tuple[int, int, int]]] = {}
         for r, entries in moves.items():
-            for start, stop, _src, dst in entries:
-                ranges_by_dst.setdefault(dst, []).append((r, start, stop))
-        for dst, ranges in ranges_by_dst.items():
-            node = topo.nodes[dst]
+            for start, stop, old_m, new_m in entries:
+                for node in new_m:
+                    if node not in old_m:
+                        ranges_by_node.setdefault(node, []).append((r, start, stop))
+        cls._drop_ranges(topo, ranges_by_node, best_effort=True)
+
+    @staticmethod
+    def _drop_ranges(
+        topo: _Topology,
+        ranges_by_node: Dict[int, List[Tuple[int, int, int]]],
+        best_effort: bool,
+    ) -> None:
+        """Delete every stored key inside (r, start, stop) ranges from the
+        given nodes' backends, and drop the whole range from their caches
+        (blobs *and* cached absences — after a membership change a node's
+        stale cache entries for the range must not outlive its data)."""
+        for idx, ranges in ranges_by_node.items():
+            node = topo.nodes[idx]
             try:
-                stranded = [
+                stale = [
                     k
                     for k in node.stored_keys()
                     if any(k[0] == r and a <= k[2] < b for r, a, b in ranges)
                 ]
-                if stranded:
-                    node.ingest_blobs([(k, None) for k in stranded])
-                    if node.cache is not None:
-                        node.cache.invalidate_many(stranded)
+                if stale:
+                    node.ingest_blobs([(k, None) for k in stale])
+                if node.cache is not None:
+                    for r, a, b in ranges:
+                        node.cache.invalidate_range(r, a, b)
             except Exception:
+                if not best_effort:
+                    raise
                 continue  # the original migration failure is re-raising
 
     # -- maintenance / introspection ---------------------------------------
@@ -770,10 +998,11 @@ class ClusterStore:
             return sum(self._fan_out(jobs).values())
 
     def stored_keys(self) -> List[Key]:
+        """Every distinct key in the cluster (replica copies dedupe)."""
         with self._gate.op():
-            keys: List[Key] = []
+            keys: set = set()
             for node in self._topo.nodes:
-                keys.extend(node.stored_keys())
+                keys.update(node.stored_keys())
             return sorted(keys)
 
     def storage_bytes(self) -> int:

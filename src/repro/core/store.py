@@ -23,6 +23,7 @@ holds the knobs (``REPRO_DECODE_WORKERS`` / ``REPRO_PREFETCH_SEGMENTS``).
 from __future__ import annotations
 
 import concurrent.futures as cf
+import contextlib
 import dataclasses
 import os
 import threading
@@ -117,6 +118,7 @@ class PathStats:
     write_bytes: int = 0
     seeks: int = 0          # discontiguous accesses (run boundaries)
     time_s: float = 0.0
+    inflight: int = 0       # cluster read jobs currently on this node (gauge)
     cache_hits: int = 0     # lookups served by the hot-cuboid cache
     cache_misses: int = 0   # lookups that had to go below the cache
     queue_depth: int = 0    # write-behind pending writes (gauge)
@@ -326,6 +328,22 @@ class CuboidStore:
     @property
     def has_cache(self) -> bool:
         return self.cache is not None
+
+    @contextlib.contextmanager
+    def serving(self):
+        """Mark one in-flight read job against this node.
+
+        ``read_stats.inflight`` is the instantaneous load gauge a cluster
+        uses to pick the least-loaded replica for a read; the cluster wraps
+        each per-node fan-out job in this so the signal tracks real
+        concurrency, not accumulated history."""
+        with self._stats_lock:
+            self.read_stats.inflight += 1
+        try:
+            yield
+        finally:
+            with self._stats_lock:
+                self.read_stats.inflight -= 1
 
     def flush(self) -> int:
         """Durability barrier: block until pending write-behind writes are

@@ -13,7 +13,9 @@ from ..cluster import (
     VolumeService,
     WriteBehindQueue,
     dispatch as volume_dispatch,
+    url_dispatch,
 )
+from .http_front import FrontDoor
 
 __all__ = [
     "make_serve_step",
@@ -23,6 +25,8 @@ __all__ = [
     "VolumeService",
     "VOLUME_HANDLERS",
     "volume_dispatch",
+    "url_dispatch",
+    "FrontDoor",
     "ClusterStore",
     "CuboidCache",
     "WriteBehindQueue",

@@ -1,0 +1,447 @@
+"""HTTP front door: the paper's stateless Web-service tier on a socket.
+
+A stdlib :class:`~http.server.ThreadingHTTPServer` adapter over the
+URL-routed v1 API (`repro.cluster.api`): every request thread parses the
+paper-style path, merges the query string and body into a request dict,
+and dispatches into the same transport-free handlers the verb table
+serves — the front door adds only *wire* concerns:
+
+* **Admission control** — data-plane requests (cutouts, projections,
+  writes, batches) pass a semaphore sized from the cluster's
+  ``request_slots`` (the `run_batch` pool that actually executes them)
+  plus a small waiting room; beyond that the request is shed immediately
+  with a ``503`` envelope instead of queueing without bound (the paper's
+  "millions of users" story needs a front door that degrades by refusing,
+  not by collapsing).
+* **Micro-batch coalescing** — concurrent small ``GET /cutout`` requests
+  against the same dataset coalesce `ContinuousBatcher`-style: the first
+  arrival becomes the *leader* and drains whatever queued while the
+  previous batch executed through ``store.run_batch`` (so the boxes
+  overlap on the cluster's request pool); identical requests are served
+  once and fan the response out.  Serial traffic passes straight through
+  with no added latency — a batch of one runs inline.
+
+Wire contract: volume GETs return ``application/octet-stream`` bodies
+with ``X-Shape`` / ``X-Dtype`` / ``X-Encode`` (``raw`` or ``zlib``)
+headers; everything else is a JSON envelope (``bytes`` and arrays
+base64-encoded).  ``PUT .../cutout/...`` takes the voxel payload as the
+request body (raw little-endian or ``?encode=zlib``).  See the README
+API reference for every route.
+"""
+
+from __future__ import annotations
+
+import base64
+import collections
+import functools
+import json
+import threading
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..cluster.api import ApiError, parse_url
+from ..cluster.handlers import HANDLERS, Request, Response, VolumeService, _error, get_cutout
+
+# Verbs that do voxel I/O — these pass the admission limiter; control
+# verbs (topology, stats, flush, rebalance, node add/remove) always get
+# through so the cluster stays operable under load.
+_DATA_PLANE = {
+    "GET /cutout",
+    "PUT /cutout",
+    "GET /projection",
+    "GET /objects/cutout",
+    "POST /batch/cutout",
+}
+# Data-plane GETs whose 200 body is the volume itself (octet-stream).
+_VOLUME_VERBS = {"GET /cutout", "GET /projection", "GET /objects/cutout"}
+# Response fields surfaced as X- headers alongside an octet-stream body.
+_HEADER_FIELDS = {
+    "encode": "X-Encode",
+    "level": "X-Level",
+    "cuboids_read": "X-Cuboids-Read",
+    "runs": "X-Runs",
+    "zero_copy": "X-Zero-Copy",
+    "id": "X-Id",
+    "lo": "X-Lo",
+}
+
+
+def _json_default(obj):
+    """JSON fallback for envelope payloads: numpy scalars widen, bytes and
+    arrays travel base64 (arrays as raw little-endian bytes — the
+    surrounding envelope carries their shape/dtype)."""
+    if isinstance(obj, (bytes, bytearray)):
+        return base64.b64encode(bytes(obj)).decode("ascii")
+    if isinstance(obj, np.ndarray):
+        return base64.b64encode(np.ascontiguousarray(obj).tobytes()).decode("ascii")
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    raise TypeError(f"not JSON serializable: {type(obj)!r}")
+
+
+class _Pending:
+    """One queued cutout awaiting its (possibly shared) response."""
+
+    __slots__ = ("request", "response", "done")
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.response: Optional[Response] = None
+        self.done = threading.Event()
+
+
+class _CutoutCoalescer:
+    """Leader/follower micro-batching for concurrent ``GET /cutout``.
+
+    The continuous-batching idiom from `repro.serve.batcher` applied to
+    reads: requests arriving while a batch executes queue up, and the
+    leader drains them as the *next* batch through ``store.run_batch`` —
+    batch size adapts to instantaneous load with zero idle-path latency.
+    Identical concurrent requests (same box/resolution/encoding) execute
+    once and share the response.
+    """
+
+    def __init__(self, service: VolumeService, max_batch: int = 16):
+        self._service = service
+        self.max_batch = max_batch
+        self._lock = threading.Lock()
+        self._queues: Dict[str, collections.deque] = {}
+        self._busy: set = set()
+        self.batches = 0  # drain rounds executed
+        self.coalesced = 0  # requests that rode a batch of >= 2
+        self.deduped = 0  # requests served from an identical twin's result
+
+    @staticmethod
+    def _key(req: Request) -> Tuple:
+        return (
+            req.get("resolution"),
+            tuple(req.get("lo", ())),
+            tuple(req.get("hi", ())),
+            req.get("channel"),
+            req.get("encode"),
+            req.get("level"),
+        )
+
+    def submit(self, request: Request) -> Response:
+        dataset = request.get("dataset")
+        store = self._service.datasets.get(dataset)
+        if store is None or not hasattr(store, "run_batch"):
+            return get_cutout(self._service, request)  # nothing to coalesce onto
+        item = _Pending(request)
+        with self._lock:
+            queue = self._queues.setdefault(dataset, collections.deque())
+            queue.append(item)
+            leader = dataset not in self._busy
+            if leader:
+                self._busy.add(dataset)
+        if leader:
+            self._drain(dataset, store)
+        item.done.wait()
+        return item.response
+
+    def _drain(self, dataset: str, store) -> None:
+        while True:
+            with self._lock:
+                queue = self._queues[dataset]
+                if not queue:
+                    # busy is cleared under the same lock as the emptiness
+                    # check, so a request appended now sees no leader and
+                    # elects itself.
+                    self._busy.discard(dataset)
+                    return
+                batch = [queue.popleft() for _ in range(min(len(queue), self.max_batch))]
+            self.batches += 1
+            if len(batch) > 1:
+                self.coalesced += len(batch)
+            groups: Dict[Tuple, List[_Pending]] = {}
+            for item in batch:
+                groups.setdefault(self._key(item.request), []).append(item)
+            self.deduped += len(batch) - len(groups)
+            reps = [items[0] for items in groups.values()]
+            try:
+                jobs = [
+                    functools.partial(get_cutout, self._service, rep.request) for rep in reps
+                ]
+                results = store.run_batch(jobs) if len(jobs) > 1 else [jobs[0]()]
+            except Exception as e:  # a handler bug must not strand waiters
+                results = [_error(500, f"batch execution failed: {e}")] * len(reps)
+            for items, resp in zip(groups.values(), results):
+                for item in items:
+                    item.response = resp
+                    item.done.set()
+
+
+class FrontDoor:
+    """The HTTP server: ``with FrontDoor(service) as front: ...``.
+
+    ``admit_limit`` bounds concurrent data-plane requests (default:
+    2x the largest registered cluster's ``request_slots`` + 2 — the
+    executing set plus a short waiting room); a request that cannot get a
+    slot within ``admit_timeout`` seconds is shed with 503.  ``port=0``
+    binds an ephemeral port (see ``.address`` after ``start()``).
+    """
+
+    def __init__(
+        self,
+        service: VolumeService,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        admit_limit: Optional[int] = None,
+        admit_timeout: float = 0.5,
+        coalesce: bool = True,
+        coalesce_max: int = 16,
+    ):
+        self.service = service
+        self._host = host
+        self._port = port
+        if admit_limit is None:
+            slots = [
+                getattr(store, "request_slots", 0) for store in service.datasets.values()
+            ]
+            admit_limit = 2 * max([s for s in slots if s] or [2]) + 2
+        self.admit_limit = int(admit_limit)
+        self.admit_timeout = admit_timeout
+        self._sem = threading.BoundedSemaphore(self.admit_limit)
+        self.coalescer = _CutoutCoalescer(service, coalesce_max) if coalesce else None
+        self._server: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+        self.address: Optional[Tuple[str, int]] = None
+        self.requests = 0
+        self.shed = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> Tuple[str, int]:
+        front = self
+
+        class Handler(_RequestHandler):
+            pass
+
+        Handler.front = front
+        self._server = ThreadingHTTPServer((self._host, self._port), Handler)
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="ocp-frontdoor", daemon=True
+        )
+        self._thread.start()
+        self.address = self._server.server_address[:2]
+        return self.address
+
+    def close(self) -> None:
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._server = None
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def __enter__(self) -> "FrontDoor":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def counters(self) -> Dict[str, int]:
+        out = {"requests": self.requests, "shed": self.shed}
+        if self.coalescer is not None:
+            out.update(
+                batches=self.coalescer.batches,
+                coalesced=self.coalescer.coalesced,
+                deduped=self.coalescer.deduped,
+            )
+        return out
+
+    # -- request handling ---------------------------------------------------
+    def handle(
+        self, method: str, path: str, query: Dict[str, str], body: bytes
+    ) -> Tuple[str, Response]:
+        """(method, path, query, body) -> (verb, response envelope)."""
+        self.requests += 1
+        try:
+            verb, params = parse_url(method, path)
+        except ApiError as e:
+            return "", _error(e.status, e.message)
+        request: Dict[str, Any] = dict(query)
+        if verb == "PUT /cutout":
+            try:
+                self._attach_put_payload(request, params, body)
+            except (ValueError, TypeError) as e:
+                return verb, _error(400, f"bad write payload: {e}")
+        elif body and method in ("POST", "DELETE"):
+            try:
+                parsed = json.loads(body.decode("utf-8"))
+                if not isinstance(parsed, dict):
+                    raise ValueError("body must be a JSON object")
+            except (ValueError, UnicodeDecodeError) as e:
+                return verb, _error(400, f"bad JSON body: {e}")
+            request.update(parsed)
+        request.update(params)  # the path IS the address: it wins
+
+        if verb not in _DATA_PLANE:
+            return verb, HANDLERS[verb](self.service, request)
+        if not self._sem.acquire(timeout=self.admit_timeout):
+            self.shed += 1
+            return verb, _error(
+                503, f"admission limit ({self.admit_limit} in flight) reached; retry"
+            )
+        try:
+            if verb == "GET /cutout" and self.coalescer is not None:
+                return verb, self.coalescer.submit(request)
+            return verb, HANDLERS[verb](self.service, request)
+        finally:
+            self._sem.release()
+
+    def _attach_put_payload(
+        self, request: Dict[str, Any], params: Request, body: bytes
+    ) -> None:
+        """Turn a PUT body into the handler's ``data`` field.
+
+        ``?encode=zlib`` hands the compressed blob straight to the handler
+        (its shape is the URL box); otherwise the body is raw
+        little-endian voxels of the dataset's dtype (or ``?dtype=``)."""
+        store = self.service.datasets.get(params.get("dataset"))
+        if store is None:
+            return  # the handler 404s before touching data
+        shape = [b - a for a, b in zip(params["lo"], params["hi"])]
+        dtype = request.get("dtype") or str(store.spec.dtype)
+        if request.get("encode") == "zlib":
+            request["data"] = body
+            request["shape"] = shape
+            request["dtype"] = dtype
+        else:
+            arr = np.frombuffer(body, dtype=np.dtype(dtype))
+            expected = int(np.prod(shape)) if shape else 0
+            if arr.size != expected:
+                raise ValueError(
+                    f"payload holds {arr.size} voxels, box {shape} needs {expected}"
+                )
+            request.pop("encode", None)
+            request["data"] = arr.reshape(shape)
+
+    def wire(
+        self, method: str, path: str, query: Dict[str, str], body: bytes
+    ) -> Tuple[int, Dict[str, str], bytes]:
+        """Full wire turn: returns (http status, headers, payload)."""
+        verb, resp = self.handle(method, path, query, body)
+        status = int(resp.get("status", 500))
+        if status == 200 and verb in _VOLUME_VERBS and "data" in resp:
+            resp = dict(resp)  # coalesced twins share the dict — don't mutate
+            data = resp.pop("data")
+            if isinstance(data, np.ndarray):
+                payload = np.ascontiguousarray(data).tobytes()
+                resp.setdefault("encode", "raw")
+            else:
+                payload = bytes(data)
+            headers = {
+                "Content-Type": "application/octet-stream",
+                "X-Shape": ",".join(str(s) for s in resp["shape"]),
+                "X-Dtype": str(resp["dtype"]),
+            }
+            for field, header in _HEADER_FIELDS.items():
+                if field in resp:
+                    value = resp[field]
+                    if isinstance(value, (list, tuple)):
+                        value = ",".join(str(v) for v in value)
+                    headers[header] = str(value)
+            return status, headers, payload
+        payload = json.dumps(resp, default=_json_default).encode("utf-8")
+        return status, {"Content-Type": "application/json"}, payload
+
+
+class _RequestHandler(BaseHTTPRequestHandler):
+    front: FrontDoor  # injected per-server by FrontDoor.start()
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, fmt, *args):  # noqa: D102 - quiet by design
+        pass
+
+    def _read_body(self) -> bytes:
+        length = int(self.headers.get("Content-Length") or 0)
+        return self.rfile.read(length) if length > 0 else b""
+
+    def _turn(self, method: str) -> None:
+        try:
+            split = urllib.parse.urlsplit(self.path)
+            query = dict(urllib.parse.parse_qsl(split.query))
+            body = self._read_body()
+            status, headers, payload = self.front.wire(
+                method, urllib.parse.unquote(split.path), query, body
+            )
+        except Exception as e:  # a handler bug must answer, not hang the socket
+            payload = json.dumps({"status": 500, "error": f"internal error: {e}"}).encode()
+            status, headers = 500, {"Content-Type": "application/json"}
+        self.send_response(status)
+        for key, value in headers.items():
+            self.send_header(key, value)
+        self.send_header("Content-Length", str(len(payload)))
+        self.end_headers()
+        self.wfile.write(payload)
+
+    def do_GET(self):
+        self._turn("GET")
+
+    def do_PUT(self):
+        self._turn("PUT")
+
+    def do_POST(self):
+        self._turn("POST")
+
+    def do_DELETE(self):
+        self._turn("DELETE")
+
+
+def demo_service(n_nodes: int = 3, replication: int = 2, size: int = 64) -> VolumeService:
+    """A small self-contained service for smoke tests and manual poking:
+    one replicated cluster dataset ("demo") filled with a gradient."""
+    from ..cluster import ClusterStore, VolumeService
+    from ..core.cuboid import DatasetSpec
+    from ..core.cutout import ingest
+
+    spec = DatasetSpec(
+        name="demo",
+        volume_shape=(size, size, size // 2),
+        dtype="uint8",
+        base_cuboid=(16, 16, 8),
+        n_resolutions=2,
+    )
+    store = ClusterStore(spec, n_nodes=n_nodes, replication=replication)
+    rng = np.random.default_rng(7)
+    ingest(store, 0, rng.integers(1, 255, size=spec.volume_shape, dtype=np.uint8))
+    service = VolumeService()
+    service.add_dataset("demo", store)
+    return service
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description="OCP data-cluster HTTP front door (demo)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8765)
+    ap.add_argument("--nodes", type=int, default=3)
+    ap.add_argument("--replication", type=int, default=2)
+    args = ap.parse_args(argv)
+    front = FrontDoor(demo_service(args.nodes, args.replication), args.host, args.port)
+    host, port = front.start()
+    print(f"front door on http://{host}:{port}  (dataset 'demo'; Ctrl-C stops)")
+    try:
+        threading.Event().wait()
+    except KeyboardInterrupt:
+        front.close()
+
+
+if __name__ == "__main__":
+    main()

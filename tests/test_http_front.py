@@ -1,0 +1,439 @@
+"""The HTTP front door over real sockets: URL routing, wire encoding,
+admission shedding, cutout coalescing, and the replicated-failover
+acceptance walk (reads stay bit-identical over HTTP while a live owner
+is decommissioned).
+
+Everything runs against an ephemeral-port `FrontDoor` (stdlib
+`ThreadingHTTPServer`) talking to in-process cluster stores — no fixtures
+beyond the standard library's `urllib`.
+"""
+import base64
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterStore, VolumeService
+from repro.core.annotations import AnnotationProject
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+from repro.core.store import CuboidStore
+from repro.serve.http_front import FrontDoor
+
+SHAPE = (32, 32, 16)
+CUBOID = (8, 8, 4)
+
+
+def spec(name="web", **kw):
+    return DatasetSpec(name=name, volume_shape=SHAPE, dtype="uint8",
+                       base_cuboid=CUBOID, **kw)
+
+
+def volume(seed=0):
+    return np.random.default_rng(seed).integers(1, 255, size=SHAPE,
+                                                dtype=np.uint8)
+
+
+def http(method, url, body=None, headers=None):
+    """One urllib round trip -> (status, headers, payload bytes)."""
+    req = urllib.request.Request(url, data=body, method=method,
+                                 headers=headers or {})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as resp:
+            return resp.status, dict(resp.headers), resp.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+def get_volume(url):
+    """GET an octet-stream volume -> ndarray (decoding zlib if flagged)."""
+    status, headers, payload = http("GET", url)
+    assert status == 200, payload
+    if headers.get("X-Encode") == "zlib":
+        payload = zlib.decompress(payload)
+    shape = tuple(int(s) for s in headers["X-Shape"].split(","))
+    return np.frombuffer(payload, dtype=headers["X-Dtype"]).reshape(shape)
+
+
+def json_body(payload):
+    return json.loads(payload)
+
+
+@pytest.fixture()
+def front():
+    """Ephemeral-port front door over one replicated cluster dataset."""
+    base = volume(seed=1)
+    store = ClusterStore(spec(), n_nodes=3, replication=2)
+    ingest(store, 0, base)
+    service = VolumeService()
+    service.add_dataset("web", store)
+    door = FrontDoor(service)
+    door.start()
+    yield door, base, store
+    door.close()
+    store.close()
+
+
+# -------------------------------------------------------------- round trips --
+
+
+def test_get_cutout_raw_and_zlib(front):
+    door, base, _store = front
+    url = f"{door.url}/v1/web/cutout/0/0,16/8,24/0,8"
+    want = base[0:16, 8:24, 0:8]
+    np.testing.assert_array_equal(get_volume(url), want)
+    np.testing.assert_array_equal(get_volume(url + "?encode=zlib"), want)
+    status, headers, _ = http("GET", url + "?encode=zlib&level=7")
+    assert status == 200
+    assert headers["X-Encode"] == "zlib" and headers["X-Level"] == "7"
+    assert headers["Content-Type"] == "application/octet-stream"
+
+
+def test_v1_prefix_optional(front):
+    door, base, _store = front
+    a = get_volume(f"{door.url}/v1/web/cutout/0/0,8/0,8/0,4")
+    b = get_volume(f"{door.url}/web/cutout/0/0,8/0,8/0,4")
+    np.testing.assert_array_equal(a, b)
+
+
+def test_put_cutout_raw_round_trip(front):
+    door, _base, _store = front
+    data = np.random.default_rng(5).integers(1, 255, size=(16, 8, 8),
+                                             dtype=np.uint8)
+    url = f"{door.url}/web/cutout/0/8,24/16,24/4,12"
+    status, _h, payload = http("PUT", url, body=data.tobytes())
+    env = json_body(payload)
+    assert status == 200 and env["written_shape"] == [16, 8, 8]
+    np.testing.assert_array_equal(get_volume(url), data)
+
+
+def test_put_cutout_zlib_round_trip(front):
+    door, _base, _store = front
+    data = np.random.default_rng(6).integers(1, 255, size=(8, 8, 4),
+                                             dtype=np.uint8)
+    url = f"{door.url}/web/cutout/0/0,8/0,8/0,4"
+    status, _h, payload = http("PUT", url + "?encode=zlib&sync=1",
+                               body=zlib.compress(data.tobytes()))
+    assert status == 200, payload
+    np.testing.assert_array_equal(get_volume(url), data)
+    # the durability barrier verb still works over the wire
+    status, _h, payload = http("POST", f"{door.url}/web/flush")
+    env = json_body(payload)
+    assert status == 200 and "flushed" in env
+
+
+def test_put_payload_size_mismatch_is_400(front):
+    door, _base, _store = front
+    status, _h, payload = http(
+        "PUT", f"{door.url}/web/cutout/0/0,8/0,8/0,4", body=b"\x01" * 10)
+    env = json_body(payload)
+    assert status == 400 and "payload" in env["error"]
+
+
+def test_projection_routes(front):
+    door, base, _store = front
+    tile = get_volume(f"{door.url}/web/xy/0/0,16/0,16/3,4")
+    np.testing.assert_array_equal(tile, base[0:16, 0:16, 3])
+    tile = get_volume(f"{door.url}/web/yz/0/2,3/0,16/0,8")
+    np.testing.assert_array_equal(tile, base[2, 0:16, 0:8])
+
+
+def test_batch_cutout_json(front):
+    door, base, _store = front
+    boxes = [[[0, 0, 0], [8, 8, 4]], [[8, 8, 4], [16, 16, 8]]]
+    body = json.dumps({"boxes": boxes, "encode": "zlib"}).encode()
+    status, _h, payload = http(
+        "POST", f"{door.url}/web/batch/cutout", body=body,
+        headers={"Content-Type": "application/json"})
+    env = json_body(payload)
+    assert status == 200 and env["n"] == 2
+    for box, result in zip(boxes, env["results"]):
+        assert result["status"] == 200 and result["encode"] == "zlib"
+        raw = zlib.decompress(base64.b64decode(result["data"]))
+        got = np.frombuffer(raw, dtype=result["dtype"]).reshape(result["shape"])
+        (x0, y0, z0), (x1, y1, z1) = box
+        np.testing.assert_array_equal(got, base[x0:x1, y0:y1, z0:z1])
+
+
+def test_stats_topology_rebalance_routes(front):
+    door, _base, store = front
+    status, _h, payload = http("GET", f"{door.url}/web/stats")
+    env = json_body(payload)
+    assert status == 200 and "read" in env and "write" in env
+    status, _h, payload = http("GET", f"{door.url}/web/topology")
+    env = json_body(payload)
+    assert status == 200 and env["n_nodes"] == 3 and env["replication"] == 2
+    status, _h, payload = http("POST", f"{door.url}/web/rebalance",
+                               body=json.dumps({"target": 4}).encode())
+    env = json_body(payload)
+    assert status == 200 and env["topology"]["n_nodes"] == 4
+    assert store.n_nodes == 4
+
+
+def test_objects_routes():
+    proj = AnnotationProject("ann", spec(name="img"))
+    a = proj.meta.create(ann_type="synapse")
+    blob = np.full((5, 4, 3), a.ann_id, dtype=np.uint32)
+    proj.write(0, (4, 6, 2), blob)
+    service = VolumeService()
+    service.add_project("ann", proj)
+    with FrontDoor(service) as door:
+        status, _h, payload = http(
+            "GET", f"{door.url}/ann/objects/{a.ann_id}/boundingbox")
+        env = json_body(payload)
+        assert status == 200 and env["id"] == a.ann_id
+        # the index is cuboid-granular: the bbox contains the written blob
+        assert all(l <= w for l, w in zip(env["lo"], (4, 6, 2)))
+        assert all(h >= w for h, w in zip(env["hi"], (9, 10, 5)))
+        status, headers, payload = http(
+            "GET", f"{door.url}/ann/objects/{a.ann_id}/cutout")
+        assert status == 200
+        got = np.frombuffer(payload, dtype=headers["X-Dtype"]).reshape(
+            tuple(int(s) for s in headers["X-Shape"].split(",")))
+        # bbox-shaped dense array: the object's voxels, all else masked to 0
+        assert set(np.unique(got)) == {0, a.ann_id}
+        assert int((got == a.ann_id).sum()) == 5 * 4 * 3
+        status, _h, payload = http("GET", f"{door.url}/ann/objects/99/boundingbox")
+        assert status == 404
+
+
+# ------------------------------------------------------------ the envelope ---
+
+
+def test_error_envelope(front):
+    door, _base, _store = front
+    cases = [
+        ("GET", "/nosuch/cutout/0/0,8/0,8/0,4", None, 404),
+        ("GET", "/web/cutout/0/8,0/0,8/0,4", None, 400),  # lo > hi
+        ("GET", "/web/cutout/0/0,x/0,8/0,4", None, 400),  # non-integer
+        ("GET", "/web/cutout/zz/0,8/0,8/0,4", None, 400),  # bad resolution
+        ("POST", "/web/topology", b"{}", 405),
+        ("DELETE", "/web/cutout/0/0,8/0,8/0,4", None, 405),
+        ("GET", "/totally/made/up/route", None, 404),
+        ("POST", "/web/batch/cutout", b"not json", 400),
+    ]
+    for method, path, body, want in cases:
+        status, _h, payload = http(method, door.url + path, body=body)
+        env = json_body(payload)
+        assert status == want, (method, path, env)
+        assert env["status"] == want and env["error"]
+
+
+# ------------------------------------------------------- admission control ---
+
+
+class _SlowStore(CuboidStore):
+    """A store whose reads block until released (to pile up admissions)."""
+
+    def __init__(self, spec, gate):
+        super().__init__(spec)
+        self._gate = gate
+
+    def fetch_blocks(self, r, runs, channel=0, sink=None):
+        self._gate.wait(timeout=30)
+        return super().fetch_blocks(r, runs, channel, sink)
+
+
+def test_admission_limit_sheds_with_503():
+    gate = threading.Event()
+    store = _SlowStore(spec(), gate)
+    ingest(store, 0, volume(seed=2))
+    gate.set()  # ingest path unaffected
+    if hasattr(store, "flush"):
+        store.flush()
+    gate.clear()
+    service = VolumeService()
+    service.add_dataset("web", store)
+    with FrontDoor(service, admit_limit=2, admit_timeout=0.1,
+                   coalesce=False) as door:
+        url = f"{door.url}/web/cutout/0/0,8/0,8/0,4"
+        results = []
+
+        def fetch():
+            results.append(http("GET", url)[0])
+
+        threads = [threading.Thread(target=fetch) for _ in range(6)]
+        for t in threads:
+            t.start()
+        time.sleep(0.5)  # let 2 enter and the rest time out of admission
+        gate.set()
+        for t in threads:
+            t.join(timeout=30)
+        assert sorted(results)[:1] == [200]  # the admitted ones finish
+        assert results.count(503) >= 1, results
+        assert door.shed >= 1 and door.counters()["shed"] == results.count(503)
+    store.close()
+
+
+def test_control_plane_never_shed():
+    """Topology/stats must answer even when the data plane is saturated."""
+    gate = threading.Event()
+    store = _SlowStore(spec(), gate)
+    ingest(store, 0, volume(seed=3))
+    gate.clear()
+    service = VolumeService()
+    service.add_dataset("web", store)
+    with FrontDoor(service, admit_limit=1, admit_timeout=0.1,
+                   coalesce=False) as door:
+        blocker = threading.Thread(
+            target=http, args=("GET", f"{door.url}/web/cutout/0/0,8/0,8/0,4"))
+        blocker.start()
+        time.sleep(0.2)
+        status, _h, _p = http("GET", f"{door.url}/web/stats")
+        assert status == 200
+        gate.set()
+        blocker.join(timeout=30)
+    store.close()
+
+
+# ---------------------------------------------------------------- coalescer --
+
+
+class _SlowCluster(ClusterStore):
+    """A cluster whose cutout fetches take a beat, so concurrent requests
+    pile up behind the coalescer's leader deterministically."""
+
+    def fetch_blocks(self, r, runs, channel=0, sink=None):
+        time.sleep(0.03)
+        return super().fetch_blocks(r, runs, channel, sink)
+
+
+def test_identical_concurrent_cutouts_coalesce():
+    base = volume(seed=4)
+    store = _SlowCluster(spec(), n_nodes=2, replication=2)
+    ingest(store, 0, base)
+    service = VolumeService()
+    service.add_dataset("web", store)
+    with FrontDoor(service, admit_limit=16) as door:
+        url = f"{door.url}/web/cutout/0/0,16/0,16/0,8"
+        want = base[0:16, 0:16, 0:8]
+        barrier = threading.Barrier(8)
+        failures = []
+
+        def fetch():
+            try:
+                barrier.wait(timeout=10)
+                for _ in range(4):
+                    np.testing.assert_array_equal(get_volume(url), want)
+            except Exception as e:  # pragma: no cover
+                failures.append(e)
+
+        threads = [threading.Thread(target=fetch) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not failures, failures
+        counters = door.counters()
+        assert counters["batches"] >= 1
+        # 8 threads x 4 identical ~30ms requests: while the leader executes
+        # one batch the rest queue, so later rounds must have shared a batch
+        assert counters["coalesced"] + counters["deduped"] > 0, counters
+    store.close()
+
+
+def test_mixed_concurrent_cutouts_all_correct(front):
+    door, base, _store = front
+    failures = []
+
+    def fetch(tid):
+        rng = np.random.default_rng(100 + tid)
+        try:
+            for _ in range(5):
+                lo = [int(rng.integers(0, s - 4)) for s in SHAPE]
+                hi = [l + 4 for l in lo]
+                url = (f"{door.url}/web/cutout/0/"
+                       + "/".join(f"{a},{b}" for a, b in zip(lo, hi)))
+                sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+                np.testing.assert_array_equal(get_volume(url), base[sl])
+        except Exception as e:  # pragma: no cover
+            failures.append((tid, e))
+
+    threads = [threading.Thread(target=fetch, args=(t,)) for t in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not failures, failures
+
+
+# ------------------------------------------------- replicated failover walk --
+
+
+def test_replicated_failover_over_http():
+    """The acceptance scenario end to end: an R=2 cluster serves
+    bit-identical cutouts over HTTP before, during, and after
+    ``DELETE /v1/web/nodes/1`` removes a live owner — zero lost or stale
+    reads, verified by a full coherence walk afterwards."""
+    base = volume(seed=11)
+    store = ClusterStore(spec(), n_nodes=3, replication=2)
+    ingest(store, 0, base)
+    store.flush()
+    service = VolumeService()
+    service.add_dataset("web", store)
+    failures = []
+    lost_reads = []
+    stop = threading.Event()
+    with FrontDoor(service) as door:
+
+        def reader(tid):
+            rng = np.random.default_rng(300 + tid)
+            try:
+                while not stop.is_set():
+                    lo = [int(rng.integers(0, s - 4)) for s in SHAPE]
+                    hi = [l + 4 for l in lo]
+                    url = (f"{door.url}/web/cutout/0/"
+                           + "/".join(f"{a},{b}" for a, b in zip(lo, hi)))
+                    status, headers, payload = http("GET", url)
+                    if status != 200:
+                        lost_reads.append((tid, status))
+                        continue
+                    got = np.frombuffer(
+                        payload, dtype=headers["X-Dtype"]).reshape(
+                        tuple(int(s) for s in headers["X-Shape"].split(",")))
+                    sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+                    np.testing.assert_array_equal(got, base[sl])
+            except Exception as e:  # pragma: no cover
+                failures.append((tid, e))
+
+        threads = [threading.Thread(target=reader, args=(t,))
+                   for t in range(3)]
+        for t in threads:
+            t.start()
+        try:
+            time.sleep(0.2)  # reads in flight before the failover
+            status, _h, payload = http("DELETE", f"{door.url}/v1/web/nodes/1")
+            env = json_body(payload)
+            assert status == 200, env
+            assert env["n_nodes"] == 2 and env["topology"]["n_nodes"] == 2
+            time.sleep(0.2)  # reads in flight after the failover
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=60)
+    assert not failures, failures
+    assert not lost_reads, lost_reads  # zero lost reads: nothing shed or 4xx
+    # post-failover coherence walk: bit-identical, keys on survivors only
+    np.testing.assert_array_equal(cutout(store, 0, (0, 0, 0), SHAPE), base)
+    store.flush()
+    assert store.n_nodes == 2
+    for r, c, m in store.stored_keys():
+        members = store.router.replica_set(r, m)
+        for i, node in enumerate(store.nodes):
+            assert node.has_cuboid(r, m, c) == (i in members)
+    store.close()
+
+
+def test_add_node_over_http(front):
+    door, base, store = front
+    status, _h, payload = http("POST", f"{door.url}/web/nodes")
+    env = json_body(payload)
+    assert status == 200 and env["node"] == 3
+    assert store.n_nodes == 4
+    np.testing.assert_array_equal(
+        get_volume(f"{door.url}/web/cutout/0/0,32/0,32/0,16"), base)

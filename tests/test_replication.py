@@ -1,0 +1,345 @@
+"""Per-segment replication: replica rings, fan-out writes, balanced reads,
+and zero-loss node removal (paper §6's availability story).
+
+The contract under test: with ``replication=N`` every curve segment lives
+on N successor nodes; writes fan out to all members, reads pick the
+least-loaded replica, and the cluster stays bit-identical to an uncached
+single `CuboidStore` reference through the same interleaved walks the
+rebalance suite runs — including `remove_node()` of a live owner, which
+must promote surviving replicas with zero lost or stale keys.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.cluster import (
+    ClusterStore,
+    RebalanceInFlight,
+    Router,
+    VolumeService,
+    dispatch,
+)
+from repro.core.cutout import cutout, ingest
+
+from test_rebalance import (
+    SHAPE,
+    rand_box,
+    random_ops,
+    run_interleaving,
+    spec,
+    volume,
+)
+
+
+def make_service(store, name="rb"):
+    service = VolumeService()
+    service.add_dataset(name, store)
+    return service
+
+
+# ------------------------------------------------------------ replica rings --
+
+
+def test_replica_ring_shape():
+    router = Router(spec(), n_nodes=4, replication=2)
+    for primary in range(4):
+        ring = router.replicas_of(primary)
+        assert ring == (primary, (primary + 1) % 4)
+    assert router.n_replicas == 2
+    # replica_set resolves through the partition owner
+    for r in range(router.spec.n_resolutions):
+        for m in range(router.n_cells(r)):
+            assert router.replica_set(r, m) == router.replicas_of(router.owner(r, m))
+
+
+def test_replication_capped_at_n_nodes():
+    router = Router(spec(), n_nodes=2, replication=5)
+    assert router.n_replicas == 2
+    assert router.replicas_of(1) == (1, 0)
+    store = ClusterStore(spec(), n_nodes=2, replication=5)
+    try:
+        assert store.topology()["replication"] == 2
+    finally:
+        store.close()
+
+
+def test_replication_survives_repartition():
+    router = Router(spec(), n_nodes=3, replication=2)
+    repart = router.with_partitions({r: router.partition(r)
+                                     for r in range(router.spec.n_resolutions)})
+    assert repart.replication == 2 and repart.n_replicas == 2
+
+
+def test_split_run_replicas_covers_run():
+    router = Router(spec(), n_nodes=3, replication=2)
+    pieces = router.split_run_replicas(0, 0, router.n_cells(0))
+    covered = [m for _, a, b in pieces for m in range(a, b)]
+    assert covered == list(range(router.n_cells(0)))
+    for members, _a, _b in pieces:
+        assert len(members) == 2 and len(set(members)) == 2
+
+
+# ---------------------------------------------------------- write fan-out ---
+
+
+def test_write_lands_on_every_member_and_nowhere_else():
+    store = ClusterStore(spec(), n_nodes=3, replication=2)
+    try:
+        ingest(store, 0, volume(seed=3))
+        store.flush()
+        keys = store.stored_keys()
+        assert keys  # the walk below must check something
+        for r, c, m in keys:
+            members = store.router.replica_set(r, m)
+            assert len(members) == 2
+            for i, node in enumerate(store.nodes):
+                assert node.has_cuboid(r, m, c) == (i in members), (
+                    f"key {(r, c, m)} misplaced on node {i}")
+    finally:
+        store.close()
+
+
+def test_replicated_cluster_matches_reference_serial():
+    """Full-volume ingest + random boxes, bit-identical to the reference."""
+    store = ClusterStore(spec(), n_nodes=3, replication=3)
+    try:
+        base = volume(seed=5)
+        ingest(store, 0, base)
+        rng = np.random.default_rng(17)
+        for _ in range(20):
+            lo, hi = rand_box(rng)
+            sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+            np.testing.assert_array_equal(cutout(store, 0, lo, hi), base[sl])
+    finally:
+        store.close()
+
+
+# ----------------------------------------------------------- read balancing --
+
+
+def test_reads_spread_across_replicas():
+    """With R == n_nodes == 2 every key lives on both nodes; the
+    least-loaded pick must not pin all traffic to one replica."""
+    store = ClusterStore(spec(), n_nodes=2, replication=2)
+    try:
+        ingest(store, 0, volume(seed=9))
+        store.flush()
+        rng = np.random.default_rng(4)
+        for _ in range(30):
+            lo, hi = rand_box(rng)
+            cutout(store, 0, lo, hi)
+        reads = [node.read_stats.reads for node in store.nodes]
+        assert all(r > 0 for r in reads), f"traffic pinned: {reads}"
+    finally:
+        store.close()
+
+
+def test_inflight_gauge_returns_to_zero():
+    store = ClusterStore(spec(), n_nodes=2, replication=2)
+    try:
+        ingest(store, 0, volume(seed=2))
+        cutout(store, 0, (0, 0, 0), SHAPE)
+        assert all(node.read_stats.inflight == 0 for node in store.nodes)
+        assert store.read_stats.inflight == 0  # gauge aggregates by max
+    finally:
+        store.close()
+
+
+# -------------------------------------------------- coherence interleavings --
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_replicated_walk_matches_reference(seed):
+    """The rebalance suite's coherence walk, replicated: topology changes
+    interleaved with reads/writes/flushes stay bit-identical at R=2."""
+    rng = np.random.default_rng(seed * 11 + 5)
+    ops = [("write_cutout", [0, 0, 0], volume(seed=seed + 20))]
+    ops += random_ops(rng, 40)
+    ops += [("rebalance", 2), ("rebalance", 4), ("rebalance", 3)]
+    run_interleaving(2, ops, replication=2)
+
+
+def test_replicated_walk_matches_reference_tiered():
+    """Same walk with the cache + write-behind tiers on top of R=2."""
+    rng = np.random.default_rng(31)
+    ops = [("write_cutout", [0, 0, 0], volume(seed=41))]
+    ops += random_ops(rng, 30)
+    ops += [("rebalance", 3), ("rebalance", 2), ("rebalance", 4)]
+    run_interleaving(2, ops, replication=2, cache_bytes=6 << 10,
+                     write_behind=True, write_behind_items=16)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+           st.sampled_from([1, 2, 3]),
+           st.sampled_from([2, 3]),
+           st.integers(min_value=5, max_value=20))
+    @settings(max_examples=10, deadline=None)
+    def test_replicated_coherence_property(seed, n_nodes, replication, n_ops):
+        rng = np.random.default_rng(seed)
+        run_interleaving(n_nodes, random_ops(rng, n_ops),
+                         replication=replication)
+
+
+# -------------------------------------------------------- zero-loss removal --
+
+
+def test_remove_node_promotes_survivors():
+    """Removing a live owner of an R=2 cluster loses nothing: the whole
+    volume reads back bit-identical and every key sits on exactly the
+    surviving replica set."""
+    store = ClusterStore(spec(), n_nodes=3, replication=2)
+    try:
+        base = volume(seed=7)
+        ingest(store, 0, base)
+        store.flush()
+        before = store.stored_keys()
+        stats = store.remove_node(1)
+        assert stats["n_nodes"] == 2 and stats["removed"] == 1
+        assert store.n_nodes == 2
+        np.testing.assert_array_equal(cutout(store, 0, (0, 0, 0), SHAPE), base)
+        store.flush()
+        assert store.stored_keys() == before
+        for r, c, m in store.stored_keys():
+            members = store.router.replica_set(r, m)
+            for i, node in enumerate(store.nodes):
+                assert node.has_cuboid(r, m, c) == (i in members)
+    finally:
+        store.close()
+
+
+def test_remove_node_unreplicated_still_streams_off():
+    """R=1 removal keeps the old migrate-everything-off behaviour."""
+    store = ClusterStore(spec(), n_nodes=3)
+    try:
+        base = volume(seed=8)
+        ingest(store, 0, base)
+        store.flush()
+        stats = store.remove_node(0)
+        assert stats["n_nodes"] == 2 and stats["moved_keys"] > 0
+        np.testing.assert_array_equal(cutout(store, 0, (0, 0, 0), SHAPE), base)
+    finally:
+        store.close()
+
+
+def test_remove_node_under_concurrent_reads():
+    """The acceptance walk, transport-free: reader threads observe
+    bit-identical cutouts before, during, and after removal of a live
+    owner from an R=2 cluster."""
+    base = volume(seed=13)
+    store = ClusterStore(spec(), n_nodes=3, replication=2)
+    failures = []
+    stop = threading.Event()
+
+    def reader(tid):
+        rng = np.random.default_rng(700 + tid)
+        try:
+            while not stop.is_set():
+                lo, hi = rand_box(rng)
+                got = cutout(store, 0, lo, hi)
+                sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+                np.testing.assert_array_equal(got, base[sl])
+        except Exception as e:  # pragma: no cover - surfaced via failures
+            failures.append((tid, e))
+
+    try:
+        ingest(store, 0, base)
+        store.flush()
+        threads = [threading.Thread(target=reader, args=(t,)) for t in range(3)]
+        for t in threads:
+            t.start()
+        try:
+            stats = store.remove_node(2)
+            assert stats["n_nodes"] == 2
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=60)
+        assert not failures, failures
+        np.testing.assert_array_equal(cutout(store, 0, (0, 0, 0), SHAPE), base)
+    finally:
+        store.close()
+
+
+def test_grow_then_shrink_replicated():
+    """add_node / remove_node round trip at R=2 stays coherent."""
+    store = ClusterStore(spec(), n_nodes=2, replication=2)
+    try:
+        base = volume(seed=21)
+        ingest(store, 0, base)
+        idx = store.add_node()
+        assert idx == 2 and store.n_nodes == 3
+        np.testing.assert_array_equal(cutout(store, 0, (0, 0, 0), SHAPE), base)
+        store.remove_node(0)
+        assert store.n_nodes == 2
+        np.testing.assert_array_equal(cutout(store, 0, (0, 0, 0), SHAPE), base)
+        store.flush()
+        for r, c, m in store.stored_keys():
+            members = store.router.replica_set(r, m)
+            for i, node in enumerate(store.nodes):
+                assert node.has_cuboid(r, m, c) == (i in members)
+    finally:
+        store.close()
+
+
+# -------------------------------------------------------- admission / 409 ---
+
+
+def test_concurrent_topology_change_raises_409():
+    """wait=False surfaces an in-flight migration as `RebalanceInFlight`;
+    the rebalance verb maps it to a 409 envelope."""
+    store = ClusterStore(spec(), n_nodes=2, replication=2)
+    try:
+        ingest(store, 0, volume(seed=1))
+        held = threading.Event()
+        release = threading.Event()
+
+        def holder():
+            with store._admin_lock:
+                held.set()
+                release.wait(timeout=30)
+
+        t = threading.Thread(target=holder)
+        t.start()
+        try:
+            assert held.wait(timeout=10)
+            with pytest.raises(RebalanceInFlight):
+                store.rebalance(wait=False)
+            with pytest.raises(RebalanceInFlight):
+                store.add_node(wait=False)
+            with pytest.raises(RebalanceInFlight):
+                store.remove_node(0, wait=False)
+            service = make_service(store)
+            resp = dispatch(service, {"verb": "POST /rebalance", "dataset": "rb"})
+            assert resp["status"] == 409 and "error" in resp
+        finally:
+            release.set()
+            t.join(timeout=10)
+        # lock released: the same verb now succeeds
+        resp = dispatch(make_service(store),
+                        {"verb": "POST /rebalance", "dataset": "rb"})
+        assert resp["status"] == 200
+    finally:
+        store.close()
+
+
+def test_topology_reports_replication():
+    store = ClusterStore(spec(), n_nodes=3, replication=2)
+    try:
+        topo = store.topology()
+        assert topo["replication"] == 2 and topo["n_nodes"] == 3
+    finally:
+        store.close()
+
+
+def test_env_default_replication(monkeypatch):
+    monkeypatch.setenv("REPRO_REPLICATION", "2")
+    store = ClusterStore(spec(), n_nodes=3)
+    try:
+        assert store.topology()["replication"] == 2
+    finally:
+        store.close()
