@@ -30,6 +30,7 @@ import numpy as np
 from repro.cluster import ClusterStore, VolumeService
 from repro.core.cuboid import DatasetSpec
 from repro.core.cutout import cutout, ingest
+from repro.obs.hist import Histogram, describe
 from repro.serve.http_front import FrontDoor
 
 
@@ -80,12 +81,14 @@ def throughput_rows() -> List[Dict]:
     rows: List[Dict] = []
     with FrontDoor(service) as door:
         failures = [0]
+        lat = Histogram()  # shared: observe() is thread-safe
 
         def client(tid):
             rng = np.random.default_rng(60 + tid)
             for _ in range(n_reqs):
                 lo, hi = boxes[int(rng.integers(0, len(boxes)))]
-                status, _h, _p = _get(_box_url(door.url, lo, hi))
+                with lat.time():
+                    status, _h, _p = _get(_box_url(door.url, lo, hi))
                 if status != 200:
                     failures[0] += 1
 
@@ -106,7 +109,8 @@ def throughput_rows() -> List[Dict]:
                         f";admit={door.admit_limit}"
                         f";coalesced={counters.get('coalesced', 0)}"
                         f";shed={counters['shed']}"
-                        f";failures={failures[0]}")})
+                        f";failures={failures[0]}"
+                        f";{describe(lat)}")})
 
         # wire overhead: one box, in-process vs raw HTTP vs zlib HTTP
         lo, hi = boxes[0]
@@ -145,13 +149,12 @@ def failover_rows() -> List[Dict]:
     boxes = _boxes(shape, 8, size=8, seed=71)
     with FrontDoor(service) as door:
         # baseline latency against the steady 3-node topology
-        samples_before: List[float] = []
+        h_before = Histogram()
         for lo, hi in boxes:
-            t0 = time.perf_counter()
-            _get(_box_url(door.url, lo, hi))
-            samples_before.append(time.perf_counter() - t0)
+            with h_before.time():
+                _get(_box_url(door.url, lo, hi))
 
-        samples_during: List[float] = []
+        h_during = Histogram()  # thread-safe: readers observe directly
         lost = [0]
         stop = threading.Event()
         lock = threading.Lock()
@@ -165,7 +168,7 @@ def failover_rows() -> List[Dict]:
                     status, headers, payload = _get(_box_url(door.url, lo, hi))
                 except Exception:
                     status, payload = 0, b""
-                dt = time.perf_counter() - t0
+                h_during.observe(time.perf_counter() - t0)
                 ok = status == 200
                 if ok:
                     got = np.frombuffer(
@@ -173,9 +176,8 @@ def failover_rows() -> List[Dict]:
                         tuple(int(s) for s in headers["X-Shape"].split(",")))
                     sl = tuple(slice(a, b) for a, b in zip(lo, hi))
                     ok = np.array_equal(got, vol[sl])
-                with lock:
-                    samples_during.append(dt)
-                    if not ok:
+                if not ok:
+                    with lock:
                         lost[0] += 1
 
         threads = [threading.Thread(target=reader, args=(81 + i,))
@@ -192,9 +194,8 @@ def failover_rows() -> List[Dict]:
         for t in threads:
             t.join(timeout=60)
     store.close()
-    mean_before = float(np.mean(samples_before))
-    mean_during = float(np.mean(samples_during)) if samples_during \
-        else mean_before
+    mean_before = h_before.mean
+    mean_during = h_during.mean if h_during.count else mean_before
     return [
         {"name": f"frontdoor/failover/{shape[0]}",
          "us_per_call": t_failover * 1e6,
@@ -202,7 +203,7 @@ def failover_rows() -> List[Dict]:
         {"name": f"frontdoor/read_during_failover/{shape[0]}",
          "us_per_call": mean_during * 1e6,
          "derived": (f"{mean_during / mean_before:.2f}x_vs_baseline"
-                     f";{len(samples_during)}samples"
+                     f";{describe(h_during)}"
                      f";lost_reads={lost[0]}")},
     ]
 

@@ -1,0 +1,108 @@
+"""Observability overhead benchmarks (the tracing tier's own cost).
+
+Tracing must be *always-on-cheap*: every request pays the sampling
+decision and every instrumented stage pays one no-op span when the
+request is untraced.  Three rows quantify that:
+
+  * ``null_span``: the untraced instrumentation primitive itself — one
+    ``with span(...)`` on an inactive trace (a single ContextVar read).
+  * ``warm_cutout_untraced``: the warm-cutout path with instrumentation
+    compiled in but no trace active; derived carries p50/p99 from a
+    latency histogram plus the *estimated* untraced overhead — spans
+    per request (counted from a traced run) x the null-span cost, as a
+    fraction of the request p50.  The acceptance bar is <= 5%.
+  * ``warm_cutout_traced``: the same loop with every request sampled,
+    so the full cost of recording spans is visible as a ratio.
+
+``BENCH_PRESET=tiny`` shrinks volumes for the CI smoke job.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.cluster import ClusterStore
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+from repro.obs import trace
+from repro.obs.hist import Histogram, describe
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    return (64, 64, 32) if preset() == "tiny" else (128, 128, 64)
+
+
+def _boxes(shape, n, size, seed=29):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        lo = [int(rng.integers(0, s - size)) for s in shape]
+        out.append((lo, [a + size for a in lo]))
+    return out
+
+
+def rows() -> List[Dict]:
+    shape = _shape()
+    vol = np.random.default_rng(11).integers(1, 255, size=shape,
+                                             dtype=np.uint8)
+    spec = DatasetSpec(name="obs_bench", volume_shape=shape, dtype="uint8",
+                       base_cuboid=(16, 16, 8))
+    store = ClusterStore(spec, n_nodes=2, cache_bytes=64 << 20)
+    ingest(store, 0, vol)
+    boxes = _boxes(shape, 8, size=16)
+    reps = 20 if preset() == "tiny" else 60
+
+    # warm the cache so both timed loops ride the hit path
+    for lo, hi in boxes:
+        cutout(store, 0, lo, hi)
+
+    # null-span microbench: the entire untraced cost of one instrumented
+    # stage (no trace is active here, whatever REPRO_TRACE_SAMPLE says)
+    n_null = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n_null):
+        with trace.span("bench"):
+            pass
+    t_null = (time.perf_counter() - t0) / n_null
+
+    h_untraced = Histogram()
+    for i in range(reps):
+        lo, hi = boxes[i % len(boxes)]
+        with h_untraced.time():
+            cutout(store, 0, lo, hi)
+
+    h_traced = Histogram()
+    last_id = ""
+    for i in range(reps):
+        lo, hi = boxes[i % len(boxes)]
+        last_id = f"obsbench{i:08x}"  # explicit id -> always sampled
+        ctx = trace.maybe_start(last_id)
+        with trace.activate(ctx), h_traced.time(), trace.span("request"):
+            cutout(store, 0, lo, hi)
+    spans_per_req = len(trace.trace_spans(last_id))
+    store.close()
+
+    p50 = h_untraced.percentile(0.5)
+    est_pct = 100.0 * spans_per_req * t_null / p50 if p50 else 0.0
+    ratio = (h_traced.percentile(0.5) / p50) if p50 else 0.0
+    return [
+        {"name": "obs/null_span",
+         "us_per_call": t_null * 1e6,
+         "derived": f"untraced_with_span;{n_null}iters"},
+        {"name": f"obs/warm_cutout_untraced/{shape[0]}",
+         "us_per_call": h_untraced.mean * 1e6,
+         "derived": (f"{describe(h_untraced)}"
+                     f";spans_per_req={spans_per_req}"
+                     f";est_untraced_overhead={est_pct:.2f}%")},
+        {"name": f"obs/warm_cutout_traced/{shape[0]}",
+         "us_per_call": h_traced.mean * 1e6,
+         "derived": (f"{describe(h_traced)}"
+                     f";p50_x_vs_untraced={ratio:.3f}")},
+    ]

@@ -54,7 +54,8 @@ def main(argv=None) -> None:
         os.environ["BENCH_PRESET"] = args.preset
 
     from . import (cache_bench, cluster_bench, coldread_bench, figs,
-                   frontdoor_bench, kernels_bench, rebalance_bench)
+                   frontdoor_bench, kernels_bench, obs_bench,
+                   rebalance_bench)
 
     sections = [
         ("fig10", figs.fig10_cutout_throughput),
@@ -66,6 +67,7 @@ def main(argv=None) -> None:
         ("coldread", coldread_bench.rows),
         ("rebalance", rebalance_bench.rows),
         ("frontdoor", frontdoor_bench.rows),
+        ("obs", obs_bench.rows),
         ("curves", kernels_bench.curve_panel_traffic),
         ("attn", kernels_bench.attention_paths),
         ("ssd", kernels_bench.ssd_duality),

@@ -27,6 +27,8 @@ GET    /<project>/objects/<id>/cutout[/<r>[/<box...>]] GET /objects/cutout
 POST   /<dataset>/batch/cutout                        POST /batch/cutout
 POST   /<dataset>/flush  (or bare /flush)             POST /flush
 GET    /<dataset>/stats                               GET /stats
+GET    /<dataset>/metrics  (or bare /metrics)         GET /metrics
+GET    /trace/<id>                                    GET /trace
 GET    /<dataset>/topology                            GET /topology
 POST   /<dataset>/rebalance                           POST /rebalance
 POST   /<dataset>/nodes                               POST /nodes/add
@@ -101,6 +103,20 @@ def parse_url(method: str, path: str) -> Tuple[str, Request]:
             raise ApiError(405, f"{method} not allowed on /flush")
         return "POST /flush", {}
 
+    # Observability surface.  Bare /metrics scrapes every dataset (the
+    # Prometheus convention); /trace is cluster-wide by construction —
+    # the span ring is per-process, not per-dataset.
+    if parts[0] == "metrics" and len(parts) == 1:
+        if method != "GET":
+            raise ApiError(405, f"{method} not allowed on /metrics")
+        return "GET /metrics", {}
+    if parts[0] == "trace":
+        if method != "GET":
+            raise ApiError(405, f"{method} not allowed on /trace")
+        if len(parts) != 2:
+            raise ApiError(404, "trace needs /trace/<id>")
+        return "GET /trace", {"trace": parts[1]}
+
     name, rest = parts[0], parts[1:]
     if not rest:
         raise ApiError(404, f"no route for /{name}")
@@ -169,7 +185,7 @@ def parse_url(method: str, path: str) -> Tuple[str, Request]:
             return "POST /nodes/remove", {"dataset": name, "node": _int(rest[1], "node index")}
         raise ApiError(405, f"{method} /{'/'.join(parts)} not allowed on nodes")
 
-    if head in ("stats", "topology", "flush", "rebalance") and len(rest) == 1:
+    if head in ("stats", "metrics", "topology", "flush", "rebalance") and len(rest) == 1:
         expected = "POST" if head in ("flush", "rebalance") else "GET"
         if method != expected:
             raise ApiError(405, f"{method} not allowed on {head} (use {expected})")

@@ -50,11 +50,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.store import Key, decompress
+from ..obs import trace
+from ..obs.registry import REGISTRY
 
 # Accounting overhead charged per cache entry (key tuple, links, and the
 # negative entries whose blob is None but which still occupy the table).
@@ -303,6 +306,8 @@ class CuboidCache:
                 admitted += 1
             self.prefetch_insertions += admitted
             self.prefetch_rejected += rejected
+        if admitted or rejected:
+            trace.event("cache.prefetch", admitted=admitted, rejected=rejected)
         return admitted, rejected
 
     def put_block(self, key: Key, blob: bytes, block: np.ndarray) -> None:
@@ -515,6 +520,7 @@ class WriteBehindQueue:
             if not batch:
                 continue
             try:
+                t0 = time.perf_counter()
                 with self._apply_lock:
                     puts = [(k, b) for k, _, b in batch if b is not None]
                     if puts:
@@ -522,6 +528,14 @@ class WriteBehindQueue:
                     for k, _, b in batch:
                         if b is None:
                             self._delete(k)
+                # The flusher runs outside any request's trace, so its
+                # visibility is a histogram, not spans: batch apply
+                # latency by size is what diagnoses a saturated queue.
+                REGISTRY.histogram(
+                    "repro_flush_batch_seconds",
+                    None,
+                    "write-behind flusher batch apply duration",
+                ).observe(time.perf_counter() - t0)
             except BaseException as e:  # park: preserve pending, re-raise later
                 with self._mu:
                     self._error = e

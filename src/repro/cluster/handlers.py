@@ -37,13 +37,17 @@ Elasticity contract (paper §6 "dynamically redistribute data"):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.annotations import AnnotationProject
 from ..core.cutout import CutoutStats, batch_cutout, cutout, project, write_cutout
+from ..obs import trace
+from ..obs.hist import Histogram
+from ..obs.registry import REGISTRY, Metric, metric
 from .store import RebalanceInFlight
 
 Request = Dict[str, Any]
@@ -127,23 +131,187 @@ def _box(request: Request):
     return lo, hi
 
 
+# -- observability ----------------------------------------------------------
+
+# PathStats fields that are occupancy gauges, not monotone counters.
+_GAUGE_FIELDS = {"inflight", "queue_depth", "queue_peak"}
+# /metrics truncates each heat direction to its N hottest buckets so the
+# exposition stays bounded on large volumes (GET /stats has the full map).
+_HEAT_TOP = 16
+
+
+def _request_hist(path: str, dataset: object) -> Histogram:
+    """The request-latency series for one ``(path, dataset)``.
+
+    Observed at the handler layer — not the HTTP front door — so the
+    benches and the batch pool (which call handlers directly, transport
+    free) populate the same p50/p99 the ``/metrics`` scrape exports."""
+    return REGISTRY.histogram(
+        "repro_request_seconds",
+        {"path": path, "dataset": str(dataset)},
+        "end-to-end handler latency by request path",
+    )
+
+
+def _collect_store_metrics(service: VolumeService, targets: List[str]) -> List[Metric]:
+    """Scrape-time translation of live store counters into metric families.
+
+    Nothing here double-counts: the stores already own their counters
+    (`PathStats`, cache/queue aggregates, heat maps, topology), so a
+    scrape reads them and renders samples — there is no second counter
+    store to drift out of sync."""
+    # {name: (mtype, help, [(label dict, value), ...])}
+    families: Dict[str, Tuple[str, str, List[Tuple[Dict[str, object], float]]]] = {}
+
+    def add(name: str, mtype: str, help_text: str, labels: Dict[str, object], value) -> None:
+        fam = families.setdefault(name, (mtype, help_text, []))
+        fam[2].append((labels, float(value)))
+
+    for n in targets:
+        store = service.datasets[n]
+        for path, stats in (("read", store.read_stats), ("write", store.write_stats)):
+            for field, value in dataclasses.asdict(stats).items():
+                labels = {"dataset": n, "path": path}
+                if field in _GAUGE_FIELDS:
+                    add(f"repro_{field}", "gauge", f"PathStats gauge {field}", labels, value)
+                elif field.endswith("_s"):
+                    add(
+                        f"repro_{field[:-2]}_seconds_total",
+                        "counter",
+                        f"PathStats accumulated seconds {field}",
+                        labels,
+                        value,
+                    )
+                else:
+                    add(
+                        f"repro_{field}_total",
+                        "counter",
+                        f"PathStats counter {field}",
+                        labels,
+                        value,
+                    )
+        if hasattr(store, "cache_counters"):
+            for k, v in store.cache_counters().items():
+                add(
+                    "repro_cluster_cache_total",
+                    "counter",
+                    "aggregate hot-cuboid cache counters across node shards",
+                    {"dataset": n, "counter": k},
+                    v,
+                )
+            for k, v in store.queue_counters().items():
+                add(
+                    "repro_cluster_queue",
+                    "gauge",
+                    "aggregate write-behind queue counters across node shards",
+                    {"dataset": n, "counter": k},
+                    v,
+                )
+        if hasattr(store, "topology"):
+            topo = store.topology()
+            add("repro_nodes", "gauge", "cluster shard count", {"dataset": n}, topo["n_nodes"])
+            if "replication" in topo:
+                add(
+                    "repro_replication",
+                    "gauge",
+                    "effective replication factor",
+                    {"dataset": n},
+                    topo["replication"],
+                )
+            add(
+                "repro_rebalancing",
+                "gauge",
+                "1 while a live migration is in flight",
+                {"dataset": n},
+                int(bool(topo["rebalancing"])),
+            )
+            for i, keys in enumerate(topo["keys_per_node"]):
+                add(
+                    "repro_node_keys",
+                    "gauge",
+                    "key occupancy per node shard",
+                    {"dataset": n, "node": i},
+                    keys,
+                )
+        if hasattr(store, "access_heat"):
+            heat = store.access_heat(top=_HEAT_TOP)
+            add(
+                "repro_segment_heat_bits",
+                "gauge",
+                "morton shift aggregating cells into heat buckets",
+                {"dataset": n},
+                heat["bits"],
+            )
+            for direction in ("read", "write"):
+                for r, bucket, count in heat[direction]:
+                    add(
+                        "repro_segment_heat_total",
+                        "counter",
+                        "per-segment access-heat touch counts (hottest buckets)",
+                        {"dataset": n, "direction": direction, "resolution": r, "bucket": bucket},
+                        count,
+                    )
+    for k, v in trace.RING.counters().items():
+        add("repro_trace_ring", "gauge", "span ring occupancy counters", {"counter": k}, v)
+    return [
+        metric(name, mtype, help_text, samples)
+        for name, (mtype, help_text, samples) in sorted(families.items())
+    ]
+
+
+def get_metrics(service: VolumeService, request: Request) -> Response:
+    """``GET /metrics`` (or ``GET /<dataset>/metrics``) — Prometheus text.
+
+    Histogram families (request / migration / flush latency) render from
+    the process-global :data:`~repro.obs.registry.REGISTRY`; counters and
+    gauges are collected from the live stores at scrape time.  The
+    envelope carries ``text`` + ``content_type`` and the HTTP front door
+    serves it verbatim (exposition format version 0.0.4)."""
+    name = request.get("dataset")
+    if name is not None and name not in service.datasets:
+        return _error(404, f"unknown dataset {name!r}")
+    targets = [name] if name is not None else sorted(service.datasets)
+    text = REGISTRY.prometheus_text(extra=_collect_store_metrics(service, targets))
+    return {
+        "status": 200,
+        "text": text,
+        "content_type": "text/plain; version=0.0.4; charset=utf-8",
+    }
+
+
+def get_trace(service: VolumeService, request: Request) -> Response:
+    """``GET /trace/<id>`` — the span tree of one sampled request.
+
+    404 means the id was never sampled (send ``X-Trace-Id`` to force a
+    trace) or its spans have been evicted from the ring."""
+    tid = request.get("trace")
+    if not tid:
+        return _error(400, "missing trace id")
+    tid = str(tid)
+    spans = trace.trace_spans(tid)
+    if not spans:
+        return _error(404, f"no spans retained for trace {tid!r}")
+    return {"status": 200, "trace": tid, "n_spans": len(spans), "spans": trace.trace_tree(tid)}
+
+
 def get_cutout(service: VolumeService, request: Request) -> Response:
     """``GET /<dataset>/cutout/<r>/<lo>/<hi>`` — dense sub-volume read."""
     store = service.datasets.get(request.get("dataset"))
     if store is None:
         return _error(404, f"unknown dataset {request.get('dataset')!r}")
-    try:
-        r = int(request.get("resolution", 0))
-        lo, hi = _box(request)
-        stats = CutoutStats()
-        vol = cutout(store, r, lo, hi, channel=int(request.get("channel", 0)), stats=stats)
-        body = _encode_volume(vol, request, store)
-    except _BAD_REQUEST as e:
-        return _error(400, f"bad cutout request: {e}")
-    body["cuboids_read"] = stats.cuboids_read
-    body["runs"] = stats.runs
-    body["zero_copy"] = bool(stats.zero_copy)  # aligned: no trim copy made
-    return body
+    with _request_hist("cutout", request.get("dataset")).time():
+        try:
+            r = int(request.get("resolution", 0))
+            lo, hi = _box(request)
+            stats = CutoutStats()
+            vol = cutout(store, r, lo, hi, channel=int(request.get("channel", 0)), stats=stats)
+            body = _encode_volume(vol, request, store)
+        except _BAD_REQUEST as e:
+            return _error(400, f"bad cutout request: {e}")
+        body["cuboids_read"] = stats.cuboids_read
+        body["runs"] = stats.runs
+        body["zero_copy"] = bool(stats.zero_copy)  # aligned: no trim copy made
+        return body
 
 
 def put_cutout(service: VolumeService, request: Request) -> Response:
@@ -151,24 +319,25 @@ def put_cutout(service: VolumeService, request: Request) -> Response:
     store = service.datasets.get(request.get("dataset"))
     if store is None:
         return _error(404, f"unknown dataset {request.get('dataset')!r}")
-    try:
-        r = int(request.get("resolution", 0))
-        lo = [int(x) for x in request["lo"]]
-        data = _decode_volume(request)
-        write_cutout(
-            store,
-            r,
-            lo,
-            data,
-            channel=int(request.get("channel", 0)),
-            discipline=request.get("discipline", "overwrite"),
-        )
-    except _BAD_REQUEST as e:
-        return _error(400, f"bad write request: {e}")
-    body: Response = {"status": 200, "written_shape": tuple(data.shape)}
-    if request.get("sync") and hasattr(store, "flush"):
-        body["flushed"] = store.flush()  # durability barrier before reply
-    return body
+    with _request_hist("put", request.get("dataset")).time():
+        try:
+            r = int(request.get("resolution", 0))
+            lo = [int(x) for x in request["lo"]]
+            data = _decode_volume(request)
+            write_cutout(
+                store,
+                r,
+                lo,
+                data,
+                channel=int(request.get("channel", 0)),
+                discipline=request.get("discipline", "overwrite"),
+            )
+        except _BAD_REQUEST as e:
+            return _error(400, f"bad write request: {e}")
+        body: Response = {"status": 200, "written_shape": tuple(data.shape)}
+        if request.get("sync") and hasattr(store, "flush"):
+            body["flushed"] = store.flush()  # durability barrier before reply
+        return body
 
 
 def get_projection(service: VolumeService, request: Request) -> Response:
@@ -176,21 +345,22 @@ def get_projection(service: VolumeService, request: Request) -> Response:
     store = service.datasets.get(request.get("dataset"))
     if store is None:
         return _error(404, f"unknown dataset {request.get('dataset')!r}")
-    try:
-        r = int(request.get("resolution", 0))
-        lo, hi = _box(request)
-        tile = project(
-            store,
-            r,
-            lo,
-            hi,
-            axis=int(request.get("axis", 2)),
-            reduce=request.get("reduce", "slice"),
-            channel=int(request.get("channel", 0)),
-        )
-        return _encode_volume(tile, request, store)
-    except _BAD_REQUEST as e:
-        return _error(400, f"bad projection request: {e}")
+    with _request_hist("projection", request.get("dataset")).time():
+        try:
+            r = int(request.get("resolution", 0))
+            lo, hi = _box(request)
+            tile = project(
+                store,
+                r,
+                lo,
+                hi,
+                axis=int(request.get("axis", 2)),
+                reduce=request.get("reduce", "slice"),
+                channel=int(request.get("channel", 0)),
+            )
+            return _encode_volume(tile, request, store)
+        except _BAD_REQUEST as e:
+            return _error(400, f"bad projection request: {e}")
 
 
 def get_annotation_bbox(service: VolumeService, request: Request) -> Response:
@@ -254,7 +424,9 @@ def get_stats(service: VolumeService, request: Request) -> Response:
     Returns the read/write `PathStats` (including cache hit/miss,
     queue-depth gauges, and the cold-read pipeline's decode/prefetch
     counters) plus, for cluster stores, the aggregate cache and
-    write-behind queue counters, and the effective `DecodePolicy` knobs.
+    write-behind queue counters, the effective `DecodePolicy` knobs, the
+    per-node `PathStats` breakdown (``nodes``), the effective replication
+    factor, and the per-resolution partition boundaries.
     """
     store = service.datasets.get(request.get("dataset"))
     if store is None:
@@ -267,6 +439,24 @@ def get_stats(service: VolumeService, request: Request) -> Response:
     if hasattr(store, "cache_counters"):
         body["cache"] = store.cache_counters()
         body["queue"] = store.queue_counters()
+    if hasattr(store, "nodes") and hasattr(store, "router"):
+        # The aggregate above hides skew; the per-node breakdown is what a
+        # deployment reads to spot a hot shard (then POST /rebalance).
+        body["nodes"] = [
+            {
+                "read": dataclasses.asdict(node.read_stats),
+                "write": dataclasses.asdict(node.write_stats),
+            }
+            for node in store.nodes
+        ]
+        router = store.router
+        body["replication"] = router.n_replicas
+        body["partitions"] = {
+            r: [int(b) for b in router.partition(r).bounds]
+            for r in range(store.spec.n_resolutions)
+        }
+    if hasattr(store, "access_heat"):
+        body["heat"] = store.access_heat(top=_HEAT_TOP)
     pol = getattr(store, "decode_policy", None)
     if pol is None and hasattr(store, "nodes"):  # cluster on node defaults
         nodes = store.nodes
@@ -341,20 +531,21 @@ def post_batch_cutout(service: VolumeService, request: Request) -> Response:
     store = service.datasets.get(request.get("dataset"))
     if store is None:
         return _error(404, f"unknown dataset {request.get('dataset')!r}")
-    try:
-        r = int(request.get("resolution", 0))
-        channel = int(request.get("channel", 0))
-        boxes = []
-        for box in request["boxes"]:
-            lo, hi = box
-            boxes.append(([int(x) for x in lo], [int(x) for x in hi]))
-        if not boxes:
-            raise ValueError("empty boxes list")
-        vols = batch_cutout(store, r, boxes, channel)
-        results = [_encode_volume(vol, request, store) for vol in vols]
-    except _BAD_REQUEST as e:
-        return _error(400, f"bad batch cutout request: {e}")
-    return {"status": 200, "n": len(results), "results": results}
+    with _request_hist("batch", request.get("dataset")).time():
+        try:
+            r = int(request.get("resolution", 0))
+            channel = int(request.get("channel", 0))
+            boxes = []
+            for box in request["boxes"]:
+                lo, hi = box
+                boxes.append(([int(x) for x in lo], [int(x) for x in hi]))
+            if not boxes:
+                raise ValueError("empty boxes list")
+            vols = batch_cutout(store, r, boxes, channel)
+            results = [_encode_volume(vol, request, store) for vol in vols]
+        except _BAD_REQUEST as e:
+            return _error(400, f"bad batch cutout request: {e}")
+        return {"status": 200, "n": len(results), "results": results}
 
 
 def post_add_node(service: VolumeService, request: Request) -> Response:
@@ -403,6 +594,8 @@ HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
     "POST /batch/cutout": post_batch_cutout,
     "POST /flush": post_flush,
     "GET /stats": get_stats,
+    "GET /metrics": get_metrics,
+    "GET /trace": get_trace,
     "GET /topology": get_topology,
     "POST /rebalance": post_rebalance,
     "POST /nodes/add": post_add_node,
@@ -419,6 +612,12 @@ def dispatch(service: VolumeService, request: Request, verb: Optional[str] = Non
         (which resolves to these same handlers).  Kept as a thin shim so
         existing request-dict callers keep working unchanged.
     """
+    warnings.warn(
+        "dispatch() is deprecated; route paper-style URL paths with "
+        "repro.cluster.api.url_dispatch (same handlers, same envelopes)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     verb = verb or request.get("verb")
     handler = HANDLERS.get(verb)
     if handler is None:

@@ -69,6 +69,8 @@ import numpy as np
 from ..core import morton
 from ..core.cuboid import DatasetSpec
 from ..core.store import BlockSink, CuboidStore, DecodePolicy, Key, MemoryBackend, PathStats
+from ..obs import trace
+from ..obs.registry import REGISTRY
 from .cache import attach_cache, enable_write_behind
 from .router import Partition, Router
 
@@ -78,6 +80,15 @@ NodeFactory = Callable[[int, DatasetSpec], CuboidStore]
 # set changes.  Node indices are *pre-migration* (physical) positions in
 # the topology the move set was computed against.
 Move = Tuple[int, int, Tuple[int, ...], Tuple[int, ...]]
+
+
+def _heat_bits() -> int:
+    """Granularity of the per-segment access-heat map: morton indices are
+    bucketed by ``m >> REPRO_HEAT_BITS`` (default 6 → 64-cuboid buckets),
+    keeping the map small on petascale curves while still localizing hot
+    regions to a partition-sized neighborhood."""
+    raw = os.environ.get("REPRO_HEAT_BITS", "")
+    return int(raw) if raw else 6
 
 
 class RebalanceInFlight(RuntimeError):
@@ -255,6 +266,15 @@ class ClusterStore:
             self._pool = cf.ThreadPoolExecutor(max_workers=workers, thread_name_prefix="ocp-node")
         else:
             self._pool = None
+        # Per-segment access heat (ROADMAP item 5's signal): morton buckets
+        # (m >> heat_bits) → touch counts, split by direction.  Updated
+        # with one dict bump per routed run piece / written block — cheap
+        # enough to stay always-on — and read by `access_heat()` (the
+        # /metrics top-N exposition and the supervisor's ClusterWatch).
+        self.heat_bits = _heat_bits()
+        self._heat_lock = threading.Lock()
+        self._read_heat: Dict[Tuple[int, int], int] = {}
+        self._write_heat: Dict[Tuple[int, int], int] = {}
         # Request-level pool for batch_cutout's multi-box overlap — lazily
         # created, and deliberately DISTINCT from the node fan-out pool: a
         # batch job itself fans out to nodes and blocks on their futures,
@@ -323,12 +343,39 @@ class ClusterStore:
         self.close()
 
     def _fan_out(self, jobs: Dict[int, Callable[[], object]]) -> Dict[int, object]:
-        """Run one job per touched node, in parallel when a pool exists."""
+        """Run one job per touched node, in parallel when a pool exists.
+
+        Jobs cross the pool boundary through ``trace.bind`` so a sampled
+        request's per-node spans nest under the stage that fanned out
+        (bind is the identity function when nothing is traced)."""
         pool = self._pool
         if pool is None or len(jobs) <= 1:
             return {n: job() for n, job in jobs.items()}
-        futures = {n: pool.submit(job) for n, job in jobs.items()}
+        futures = {n: pool.submit(trace.bind(job)) for n, job in jobs.items()}
         return {n: f.result() for n, f in futures.items()}
+
+    # -- access heat ---------------------------------------------------------
+    def _touch_heat(self, heat: Dict[Tuple[int, int], int], r: int, m: int, n: int = 1) -> None:
+        key = (r, m >> self.heat_bits)
+        with self._heat_lock:
+            heat[key] = heat.get(key, 0) + n
+
+    def access_heat(self, top: Optional[int] = None) -> Dict[str, object]:
+        """Per-segment access-heat counters: morton-bucket touch counts by
+        direction, hottest first.  ``top`` truncates each direction to its
+        N hottest buckets (the ``/metrics`` exposition asks for a top-N;
+        the supervisor's ClusterWatch reads the full map)."""
+        with self._heat_lock:
+            read = dict(self._read_heat)
+            write = dict(self._write_heat)
+
+        def rank(heat: Dict[Tuple[int, int], int]) -> List[Tuple[int, int, int]]:
+            rows = sorted(
+                ((r, b, n) for (r, b), n in heat.items()), key=lambda t: (-t[2], t[0], t[1])
+            )
+            return rows[:top] if top is not None else rows
+
+        return {"bits": self.heat_bits, "read": rank(read), "write": rank(write)}
 
     # -- replica selection --------------------------------------------------
     def _pick_replica(
@@ -360,27 +407,36 @@ class ClusterStore:
 
     def _read_split(self, topo: _Topology, r: int, runs) -> Dict[int, List[Tuple[int, int]]]:
         """Split runs at partition boundaries and route each piece to the
-        least-loaded member of its replica set."""
+        least-loaded member of its replica set.  Every routed piece bumps
+        the read-heat bucket of its start index (piece-granular, not
+        per-cuboid — heat is a ranking signal, not an exact count)."""
         router = topo.router
         if router.n_replicas == 1:
-            return router.split_runs(r, runs)
+            by_node = router.split_runs(r, runs)
+            for pieces in by_node.values():
+                for a, b in pieces:
+                    self._touch_heat(self._read_heat, r, a, b - a)
+            return by_node
         assigned: Dict[int, int] = {}
-        by_node: Dict[int, List[Tuple[int, int]]] = {}
+        by_node = {}
         for start, stop in runs:
             for members, a, b in router.split_run_replicas(r, start, stop):
                 node = self._pick_replica(topo, members, assigned)
                 assigned[node] = assigned.get(node, 0) + 1
                 by_node.setdefault(node, []).append((a, b))
+                self._touch_heat(self._read_heat, r, a, b - a)
         return by_node
 
     @staticmethod
-    def _serving_job(node: CuboidStore, fn: Callable[[], object]) -> Callable[[], object]:
+    def _serving_job(node: CuboidStore, fn: Callable[[], object], idx: int) -> Callable[[], object]:
         """Wrap a per-node read job so the node's inflight gauge tracks it
-        (the signal `_pick_replica` balances on)."""
+        (the signal `_pick_replica` balances on) and a sampled request
+        gets one ``node.fetch`` span per fanned-out node."""
 
         def run():
-            with node.serving():
-                return fn()
+            with trace.span("node.fetch", node=idx):
+                with node.serving():
+                    return fn()
 
         return run
 
@@ -400,6 +456,7 @@ class ClusterStore:
         with self._gate.op():
             topo = self._topo
             members = topo.router.replica_set(r, m)
+            self._touch_heat(self._read_heat, r, m)
             node = topo.nodes[self._pick_replica(topo, members)]
             with node.serving():
                 return node.read_cuboid(r, m, channel)
@@ -408,6 +465,7 @@ class ClusterStore:
         with self._gate.op():
             topo = self._topo
             members = topo.router.replica_set(r, m)
+            self._touch_heat(self._write_heat, r, m)
             targets = self._write_targets(topo, r, m)
             if len(targets) == len(members):
                 for node in targets:
@@ -435,6 +493,7 @@ class ClusterStore:
             out: List[np.ndarray] = []
             assigned: Dict[int, int] = {}
             for members, a, b in topo.router.split_run_replicas(r, start, stop):
+                self._touch_heat(self._read_heat, r, a, b - a)
                 idx = self._pick_replica(topo, members, assigned)
                 assigned[idx] = assigned.get(idx, 0) + 1
                 node = topo.nodes[idx]
@@ -466,6 +525,7 @@ class ClusterStore:
                     functools.partial(
                         topo.nodes[node].fetch_runs, r, node_runs, channel, decode=decode
                     ),
+                    node,
                 )
                 for node, node_runs in by_node.items()
             }
@@ -499,6 +559,7 @@ class ClusterStore:
                     functools.partial(
                         topo.nodes[node].fetch_blocks, r, node_runs, channel, sink=sink
                     ),
+                    node,
                 )
                 for node, node_runs in by_node.items()
             }
@@ -529,7 +590,7 @@ class ClusterStore:
                     thread_name_prefix="ocp-batch",
                 )
             pool = self._batch_pool
-        futures = [pool.submit(job) for job in jobs]
+        futures = [pool.submit(trace.bind(job)) for job in jobs]
         return [f.result() for f in futures]
 
     @property
@@ -555,6 +616,7 @@ class ClusterStore:
             doubling: Dict[int, Dict[int, np.ndarray]] = {}
             for m, data in blocks.items():
                 members = topo.router.replica_set(r, m)
+                self._touch_heat(self._write_heat, r, m)
                 extras = _move_extras(moves, m, members) if moves else ()
                 if extras:
                     # migrating: double-write members + added members under
@@ -678,12 +740,18 @@ class ClusterStore:
             # _migrate_live drained every op that could still hold the old
             # snapshot; nothing references the victim now.
             topo.nodes[idx].close()
+            seconds = time.perf_counter() - t0
+            REGISTRY.histogram(
+                "repro_migration_seconds",
+                {"op": "remove_node"},
+                "live topology-change duration by admin op",
+            ).observe(seconds)
             return {
                 "n_nodes": n - 1,
                 "removed": idx,
                 "moved_keys": moved_keys,
                 "moved_bytes": moved_bytes,
-                "seconds": time.perf_counter() - t0,
+                "seconds": seconds,
             }
         finally:
             self._admin_lock.release()
@@ -740,11 +808,17 @@ class ClusterStore:
                 raise
             for node in dropped:  # shrink: every op on the old snapshot drained
                 node.close()
+            seconds = time.perf_counter() - t0
+            REGISTRY.histogram(
+                "repro_migration_seconds",
+                {"op": "rebalance"},
+                "live topology-change duration by admin op",
+            ).observe(seconds)
             return {
                 "n_nodes": n_new,
                 "moved_keys": moved_keys,
                 "moved_bytes": moved_bytes,
-                "seconds": time.perf_counter() - t0,
+                "seconds": seconds,
             }
         finally:
             self._admin_lock.release()

@@ -34,6 +34,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace
 from . import morton
 from .cuboid import CuboidGrid
 from .store import CuboidStore, decompress
@@ -122,7 +123,8 @@ def cutout(store: CuboidStore, r: int, lo: Sequence[int], hi: Sequence[int],
     dtype = np.dtype(store.spec.dtype)
     if any(l >= h for l, h in zip(lo, hi)):
         return np.zeros([max(0, h - l) for l, h in zip(lo, hi)], dtype=dtype)
-    plan = plan_cutout(grid, r, lo, hi, max_runs=max_runs)
+    with trace.span("plan", r=r):
+        plan = plan_cutout(grid, r, lo, hi, max_runs=max_runs)
     buf = np.zeros(plan.buf_shape, dtype=dtype)
     targets = {int(m): (sl, keep) for m, sl, keep in
                zip(plan.cells, plan.buf_slices, plan.keep_shapes)}
@@ -138,7 +140,10 @@ def cutout(store: CuboidStore, r: int, lo: Sequence[int], hi: Sequence[int],
         sl, keep = t
         buf[sl] = block[tuple(slice(0, s) for s in keep)]
 
-    store.fetch_blocks(r, plan.runs, channel, sink=assemble)
+    # One span covers fetch + decode + assembly — the whole pipelined
+    # read (per-node fetch and decode spans nest inside it).
+    with trace.span("assemble", cuboids=len(plan.cells), runs=len(plan.runs)):
+        store.fetch_blocks(r, plan.runs, channel, sink=assemble)
     # Cuboid-aligned requests assemble the answer exactly: hand the buffer
     # over as-is instead of copying the whole volume through a no-op trim.
     aligned = (plan.lo == plan.alo
@@ -231,7 +236,8 @@ def write_cutout(store: CuboidStore, r: int, lo: Sequence[int],
     # (compressed, cheap to hold), merge per cuboid, batch write-back in
     # bounded chunks so peak decompressed memory stays O(chunk) rather
     # than O(region) — bulk ingest routes whole volumes through here.
-    blobs = store.fetch_runs(r, plan.runs, channel)
+    with trace.span("write.fetch", runs=len(plan.runs)):
+        blobs = store.fetch_runs(r, plan.runs, channel)
     flush_every = 64  # ~16 MB of 256K-voxel uint8 cuboids per chunk
     out_blocks: Dict[int, np.ndarray] = {}
     for cell, origin in zip(plan.cells, plan.origins):
@@ -268,10 +274,12 @@ def write_cutout(store: CuboidStore, r: int, lo: Sequence[int],
         block[bsl] = merged.astype(block.dtype)
         out_blocks[m] = block
         if len(out_blocks) >= flush_every:
-            store.store_cuboids(r, out_blocks, channel)
+            with trace.span("write.store", cuboids=len(out_blocks)):
+                store.store_cuboids(r, out_blocks, channel)
             out_blocks = {}
     if out_blocks:
-        store.store_cuboids(r, out_blocks, channel)
+        with trace.span("write.store", cuboids=len(out_blocks)):
+            store.store_cuboids(r, out_blocks, channel)
 
 
 def project(store: CuboidStore, r: int, lo: Sequence[int],

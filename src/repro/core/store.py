@@ -33,6 +33,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace
 from .cuboid import DatasetSpec
 
 Key = Tuple[int, int, int]  # (resolution, channel, morton index)
@@ -585,7 +586,8 @@ class CuboidStore:
             if miss_idx:
                 gen0 = self._read_gen()
                 sub = [keys[i] for i in miss_idx]
-                fetched = self._fetch_misses(sub)
+                with trace.span("store.fetch", cuboids=len(sub)):
+                    fetched = self._fetch_misses(sub)
                 for i, blob in zip(miss_idx, fetched):
                     blobs[i] = blob
                 self._absorb_reads(list(zip(sub, fetched)), gen0)
@@ -614,18 +616,22 @@ class CuboidStore:
         def run_chunk(lo: int, hi: int) -> None:
             sub = list(keys[lo:hi])
             gen0 = self._read_gen()
-            fetched = self._fetch_misses(sub)
+            with trace.span("store.fetch", cuboids=hi - lo):
+                fetched = self._fetch_misses(sub)
             t0 = time.perf_counter()
             decoded: List[Optional[np.ndarray]] = []
             n_blobs = 0
-            for m, blob in zip(cells[lo:hi], fetched):
-                if blob is None:
-                    block = None
-                else:
-                    block = decompress(blob, shape, dtype)
-                    n_blobs += 1
-                decoded.append(block)
-                emit(m, block)
+            with trace.span("decode", cuboids=hi - lo) as tmeta:
+                for m, blob in zip(cells[lo:hi], fetched):
+                    if blob is None:
+                        block = None
+                    else:
+                        block = decompress(blob, shape, dtype)
+                        n_blobs += 1
+                    decoded.append(block)
+                    emit(m, block)
+                if tmeta is not None:
+                    tmeta["blobs"] = n_blobs
             dt = time.perf_counter() - t0
             self._absorb_reads(list(zip(sub, fetched)), gen0,
                                blocks=decoded)
@@ -646,10 +652,11 @@ class CuboidStore:
 
         def run_chunk(lo: int, hi: int) -> None:
             t0 = time.perf_counter()
-            for m, key, blob in items[lo:hi]:
-                block = decompress(blob, shape, dtype)
-                cache.attach_block(key, blob, block)
-                emit(m, block)
+            with trace.span("decode", cuboids=hi - lo, source="cache"):
+                for m, key, blob in items[lo:hi]:
+                    block = decompress(blob, shape, dtype)
+                    cache.attach_block(key, blob, block)
+                    emit(m, block)
             with self._stats_lock:
                 self.read_stats.decoded_blocks += hi - lo
                 self.read_stats.decode_s += time.perf_counter() - t0
@@ -686,8 +693,11 @@ class CuboidStore:
         # still caps pooled decode at pol.workers threads process-wide;
         # the callers beyond that are the node workers themselves, which
         # IS the intended node-parallel decode.
+        # Pool drains carry the caller's active trace span (bind is the
+        # identity when nothing is traced), so a sampled request's decode
+        # spans nest under the stage that spawned them.
         pool = _decode_pool(pol.workers)
-        futures = [pool.submit(drain)
+        futures = [pool.submit(trace.bind(drain))
                    for _ in range(min(pol.workers - 1, len(bounds) - 1))]
         # Always join the pool drains before returning — an exception in
         # the caller's own drain must not strand workers writing into a
@@ -774,6 +784,8 @@ class CuboidStore:
                 if cache is not None:
                     self.read_stats.cache_hits += hits_n
                     self.read_stats.cache_misses += len(keys)
+            if cache is not None:
+                trace.event("cache.lookup", hits=hits_n, misses=len(keys))
             if hit_blobs:
                 self._decode_hit_blobs(hit_blobs, shape, dtype, emit)
             if keys:
@@ -822,6 +834,9 @@ class CuboidStore:
                 self.read_stats.reads += hits_n + n_handoff
                 self.read_stats.cache_hits += hits_n
                 self.read_stats.cache_misses += len(miss_idx)
+            trace.event(
+                "cache.lookup", hits=hits_n, misses=len(miss_idx), handoff=n_handoff
+            )
             if hit_blobs:  # decode-only work (e.g. prefetched segments)
                 self._decode_hit_blobs(hit_blobs, shape, dtype, emit)
             if pf_pairs:  # handed-off blobs: decode-only work too
@@ -873,8 +888,9 @@ class CuboidStore:
             n = 0
             for j in range(i + 1, min(i + 1 + depth, len(runs))):
                 if j not in inflight:
+                    trace.event("prefetch.issue", run=j)
                     inflight[j] = (gen_now, pool.submit(
-                        self._prefetch_run, r, runs[j], channel))
+                        trace.bind(self._prefetch_run), r, runs[j], channel))
                     n += 1
             if n:
                 with self._stats_lock:

@@ -1,5 +1,5 @@
-from .supervisor import (FailureInjector, StragglerMonitor,
+from .supervisor import (ClusterWatch, FailureInjector, StragglerMonitor,
                          TrainingSupervisor, WorkerFailure)
 
-__all__ = ["FailureInjector", "StragglerMonitor", "TrainingSupervisor",
-           "WorkerFailure"]
+__all__ = ["ClusterWatch", "FailureInjector", "StragglerMonitor",
+           "TrainingSupervisor", "WorkerFailure"]

@@ -12,7 +12,12 @@ supervisor wraps the step loop:
     re-partition (paper C3),
   * straggler monitoring: per-worker EMA of step times; workers slower
     than ``threshold x median`` are flagged and their data work units are
-    re-issued to the steal queue (pipeline.overdecompose).
+    re-issued to the steal queue (pipeline.overdecompose),
+  * storage-tier watching: `ClusterWatch` polls the data cluster's
+    observability gauges (key occupancy, write-behind queue depth,
+    per-segment access heat) and advises the live control verbs —
+    ``POST /rebalance`` on occupancy skew, ``POST /flush`` on queue
+    pressure.
 
 On a real cluster the failure signal comes from the coordinator
 (jax.distributed heartbeats); here `FailureInjector` produces deterministic
@@ -75,6 +80,76 @@ class StragglerMonitor:
 
     def reissue(self, worker: int) -> None:
         self.reissued.append(worker)
+
+
+class ClusterWatch:
+    """Advise storage-tier control actions from observability gauges.
+
+    The training tier recovers by checkpoint/restart; the storage tier's
+    analogous loop is *watch and re-shape*: the same gauges the
+    ``/metrics`` scrape exports (``keys_per_node``, write-behind
+    ``depth``, segment heat) feed two live control verbs the cluster
+    already serves — rebalance on occupancy skew, flush on queue
+    pressure.  The watch only *advises*; invoking the verbs stays with
+    the operator (or the caller's loop) because both move data.
+
+    Works against any store with ``topology()``; queue and heat signals
+    degrade gracefully when the store lacks them (single-node tiers).
+    """
+
+    def __init__(self, store, skew: float = 1.5, max_queue_depth: int = 256,
+                 heat_top: int = 4):
+        self.store = store
+        self.skew = skew                    # max/mean occupancy ratio that trips
+        self.max_queue_depth = max_queue_depth
+        self.heat_top = heat_top
+        self.history: List[Dict] = []
+
+    def sample(self) -> Dict:
+        """One gauge snapshot, appended to ``history``."""
+        topo = (self.store.topology() if hasattr(self.store, "topology")
+                else {"n_nodes": 1, "keys_per_node": []})
+        snap: Dict = {
+            "n_nodes": int(topo["n_nodes"]),
+            "rebalancing": bool(topo.get("rebalancing", False)),
+            "keys_per_node": [int(k) for k in topo.get("keys_per_node", [])],
+            "queue_depth": 0,
+            "hot": [],
+        }
+        if hasattr(self.store, "queue_counters"):
+            snap["queue_depth"] = int(self.store.queue_counters().get("depth", 0))
+        if hasattr(self.store, "access_heat"):
+            heat = self.store.access_heat(top=self.heat_top)
+            snap["hot"] = [tuple(row) for row in heat["read"]]
+        self.history.append(snap)
+        return snap
+
+    def advise(self, snap: Optional[Dict] = None) -> List[Dict]:
+        """Actions implied by a snapshot (default: the latest sampled)."""
+        if snap is None:
+            snap = self.history[-1] if self.history else self.sample()
+        actions: List[Dict] = []
+        keys = snap["keys_per_node"]
+        occupied = [k for k in keys if k > 0]
+        if len(keys) > 1 and occupied and not snap["rebalancing"]:
+            mean = sum(keys) / len(keys)
+            if mean > 0 and max(keys) / mean > self.skew:
+                actions.append({
+                    "action": "rebalance",
+                    "reason": f"occupancy skew {max(keys) / mean:.2f} > {self.skew}",
+                    "keys_per_node": keys,
+                })
+        if snap["queue_depth"] > self.max_queue_depth:
+            actions.append({
+                "action": "flush",
+                "reason": (f"write-behind depth {snap['queue_depth']} > "
+                           f"{self.max_queue_depth}"),
+            })
+        return actions
+
+    def step(self) -> List[Dict]:
+        """Sample then advise — one watch-loop tick."""
+        return self.advise(self.sample())
 
 
 class TrainingSupervisor:

@@ -1,0 +1,55 @@
+"""Observability: request tracing, mergeable latency histograms, metric
+registry/exposition, and structured logging.
+
+The sensory system the cluster's remaining roadmap items read from —
+``GET /metrics`` (Prometheus text), ``GET /trace/<id>`` (span tree), the
+structured access/slow-request log, and the heat/queue gauges the
+supervisor and rebalancer consume.
+"""
+
+from .hist import BOUNDS, Histogram, describe
+from .log import access_enabled, access_log, slow_request, slow_threshold_s
+from .registry import REGISTRY, Metric, Registry, metric, render_labels
+from .trace import (
+    RING,
+    SpanRing,
+    TraceContext,
+    activate,
+    bind,
+    current,
+    event,
+    maybe_start,
+    mint_trace_id,
+    sample_period,
+    span,
+    trace_spans,
+    trace_tree,
+)
+
+__all__ = [
+    "BOUNDS",
+    "Histogram",
+    "describe",
+    "access_enabled",
+    "access_log",
+    "slow_request",
+    "slow_threshold_s",
+    "REGISTRY",
+    "Metric",
+    "Registry",
+    "metric",
+    "render_labels",
+    "RING",
+    "SpanRing",
+    "TraceContext",
+    "activate",
+    "bind",
+    "current",
+    "event",
+    "maybe_start",
+    "mint_trace_id",
+    "sample_period",
+    "span",
+    "trace_spans",
+    "trace_tree",
+]

@@ -1,0 +1,109 @@
+"""Structured (JSON-lines) logging: access log + slow-request dumps.
+
+The stdlib ``BaseHTTPRequestHandler`` writes raw access lines to stderr,
+which interleaves with test output and bench tables.  This module gives
+the front door a structured replacement that is **silent by default**:
+
+* ``REPRO_ACCESS_LOG=1`` — emit one JSON line per HTTP request
+  (method, path, status, duration, trace id when sampled).
+* ``REPRO_SLOW_MS=<threshold>`` — any request slower than the threshold
+  dumps a structured ``slow_request`` record carrying its span tree (the
+  trace the operator would otherwise have to re-trigger and re-capture).
+
+Records go through a standard :mod:`logging` logger (``repro.obs``), so
+embedders can attach their own handlers; when nothing is configured and
+a record *is* enabled, a stderr handler is attached lazily on first use.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional
+
+__all__ = ["LOGGER", "access_enabled", "slow_threshold_s", "access_log", "slow_request", "emit"]
+
+LOGGER = logging.getLogger("repro.obs")
+LOGGER.setLevel(logging.INFO)
+
+_handler_lock = threading.Lock()
+
+
+def _ensure_handler() -> None:
+    """Attach a stderr JSON-line handler once, only when something is
+    actually emitted — a logger with no records configures nothing."""
+    if LOGGER.handlers or LOGGER.propagate and logging.getLogger().handlers:
+        return
+    with _handler_lock:
+        if LOGGER.handlers:
+            return
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter("%(message)s"))
+        LOGGER.addHandler(handler)
+        LOGGER.propagate = False
+
+
+def access_enabled() -> bool:
+    return os.environ.get("REPRO_ACCESS_LOG", "") == "1"
+
+
+def slow_threshold_s() -> Optional[float]:
+    """``REPRO_SLOW_MS`` as seconds, or ``None`` when unset/disabled."""
+    raw = os.environ.get("REPRO_SLOW_MS", "")
+    if not raw:
+        return None
+    ms = float(raw)
+    return ms / 1000.0 if ms >= 0 else None
+
+
+def emit(kind: str, **fields: Any) -> None:
+    """One JSON line: ``{"kind": ..., "ts": ..., **fields}``."""
+    _ensure_handler()
+    record: Dict[str, Any] = {"kind": kind, "ts": round(time.time(), 6)}
+    record.update(fields)
+    LOGGER.info(json.dumps(record, default=str, separators=(",", ":")))
+
+
+def access_log(
+    method: str,
+    path: str,
+    status: int,
+    dur_s: float,
+    trace_id: Optional[str] = None,
+) -> None:
+    """One structured access-log line, gated on ``REPRO_ACCESS_LOG=1``."""
+    if not access_enabled():
+        return
+    fields: Dict[str, Any] = {
+        "method": method,
+        "path": path,
+        "status": int(status),
+        "dur_ms": round(dur_s * 1e3, 3),
+    }
+    if trace_id:
+        fields["trace"] = trace_id
+    emit("access", **fields)
+
+
+def slow_request(
+    method: str,
+    path: str,
+    dur_s: float,
+    trace_id: Optional[str],
+    tree: Any,
+) -> None:
+    """Threshold-triggered span-tree dump (caller already checked the
+    duration against :func:`slow_threshold_s`)."""
+    emit(
+        "slow_request",
+        method=method,
+        path=path,
+        dur_ms=round(dur_s * 1e3, 3),
+        threshold_ms=round((slow_threshold_s() or 0.0) * 1e3, 3),
+        trace=trace_id,
+        spans=tree,
+    )

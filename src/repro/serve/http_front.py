@@ -36,6 +36,7 @@ import collections
 import functools
 import json
 import threading
+import time
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Optional, Tuple
@@ -44,6 +45,8 @@ import numpy as np
 
 from ..cluster.api import ApiError, parse_url
 from ..cluster.handlers import HANDLERS, Request, Response, VolumeService, _error, get_cutout
+from ..obs import log as obs_log
+from ..obs import trace
 
 # Verbs that do voxel I/O — these pass the admission limiter; control
 # verbs (topology, stats, flush, rebalance, node add/remove) always get
@@ -292,7 +295,14 @@ class FrontDoor:
 
         if verb not in _DATA_PLANE:
             return verb, HANDLERS[verb](self.service, request)
-        if not self._sem.acquire(timeout=self.admit_timeout):
+        # The wait for an admission slot is the first stage of a sampled
+        # request's span tree (queue wait → plan → fetch → decode →
+        # assemble); shedding shows up as an errored queue.wait span.
+        with trace.span("queue.wait", limit=self.admit_limit) as tmeta:
+            admitted = self._sem.acquire(timeout=self.admit_timeout)
+            if tmeta is not None:
+                tmeta["admitted"] = admitted
+        if not admitted:
             self.shed += 1
             return verb, _error(
                 503, f"admission limit ({self.admit_limit} in flight) reached; retry"
@@ -332,10 +342,43 @@ class FrontDoor:
             request["data"] = arr.reshape(shape)
 
     def wire(
-        self, method: str, path: str, query: Dict[str, str], body: bytes
+        self,
+        method: str,
+        path: str,
+        query: Dict[str, str],
+        body: bytes,
+        headers: Optional[Dict[str, str]] = None,
     ) -> Tuple[int, Dict[str, str], bytes]:
-        """Full wire turn: returns (http status, headers, payload)."""
-        verb, resp = self.handle(method, path, query, body)
+        """Full wire turn: returns (http status, headers, payload).
+
+        ``headers`` are the request headers; an ``X-Trace-Id`` there
+        always traces the request (whatever ``REPRO_TRACE_SAMPLE`` says),
+        and a traced response carries the id back in ``X-Trace-Id`` so
+        the caller can fetch the span tree via ``GET /trace/<id>``.
+        """
+        t0 = time.perf_counter()
+        ctx = trace.maybe_start((headers or {}).get("X-Trace-Id"))
+        if ctx is None:
+            verb, resp = self.handle(method, path, query, body)
+        else:
+            with trace.activate(ctx):
+                with trace.span("request", method=method, path=path):
+                    verb, resp = self.handle(method, path, query, body)
+        status, out_headers, payload = self._encode_response(verb, resp)
+        trace_id = ctx.trace_id if ctx is not None else None
+        if trace_id is not None:
+            out_headers["X-Trace-Id"] = trace_id
+        dur = time.perf_counter() - t0
+        threshold = obs_log.slow_threshold_s()
+        if threshold is not None and dur >= threshold:
+            tree = trace.trace_tree(trace_id) if trace_id is not None else []
+            obs_log.slow_request(method, path, dur, trace_id, tree)
+        obs_log.access_log(method, path, status, dur, trace_id)
+        return status, out_headers, payload
+
+    def _encode_response(
+        self, verb: str, resp: Response
+    ) -> Tuple[int, Dict[str, str], bytes]:
         status = int(resp.get("status", 500))
         if status == 200 and verb in _VOLUME_VERBS and "data" in resp:
             resp = dict(resp)  # coalesced twins share the dict — don't mutate
@@ -357,6 +400,11 @@ class FrontDoor:
                         value = ",".join(str(v) for v in value)
                     headers[header] = str(value)
             return status, headers, payload
+        if status == 200 and "text" in resp:
+            # Plain-text envelope (the Prometheus /metrics exposition).
+            payload = str(resp["text"]).encode("utf-8")
+            content_type = str(resp.get("content_type", "text/plain; charset=utf-8"))
+            return status, {"Content-Type": content_type}, payload
         payload = json.dumps(resp, default=_json_default).encode("utf-8")
         return status, {"Content-Type": "application/json"}, payload
 
@@ -365,8 +413,19 @@ class _RequestHandler(BaseHTTPRequestHandler):
     front: FrontDoor  # injected per-server by FrontDoor.start()
     protocol_version = "HTTP/1.1"
 
-    def log_message(self, fmt, *args):  # noqa: D102 - quiet by design
+    def log_request(self, code="-", size="-"):  # noqa: D102
+        # The per-request stderr line BaseHTTPRequestHandler would print
+        # here is replaced by the structured access log `wire()` emits
+        # (method, path, status, duration, trace id) — same gate, one
+        # JSON line per request instead of interleaved raw stderr.
         pass
+
+    def log_message(self, fmt, *args):  # noqa: D102
+        # Everything else the stdlib handler logs (log_error: malformed
+        # requests, broken pipes) routes through the structured logger —
+        # silent by default, REPRO_ACCESS_LOG=1 to enable.
+        if obs_log.access_enabled():
+            obs_log.emit("httpd", message=fmt % args)
 
     def _read_body(self) -> bytes:
         length = int(self.headers.get("Content-Length") or 0)
@@ -378,7 +437,8 @@ class _RequestHandler(BaseHTTPRequestHandler):
             query = dict(urllib.parse.parse_qsl(split.query))
             body = self._read_body()
             status, headers, payload = self.front.wire(
-                method, urllib.parse.unquote(split.path), query, body
+                method, urllib.parse.unquote(split.path), query, body,
+                headers=dict(self.headers.items()),
             )
         except Exception as e:  # a handler bug must answer, not hang the socket
             payload = json.dumps({"status": 500, "error": f"internal error: {e}"}).encode()

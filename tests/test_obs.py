@@ -1,0 +1,339 @@
+"""Observability tier: trace spans, latency histograms, /metrics + /trace.
+
+Covers the contracts the ISSUE pins down:
+
+* counter invariants under concurrency — ``reads == cache_hits +
+  cache_misses`` after a storm of concurrent replicated reads racing a
+  live ``rebalance()``, and the ``inflight`` gauge back at 0 after,
+* histogram merge is associative and commutative with conserved counts
+  (what makes per-node histograms aggregatable by a scraper),
+* a traced request's span tree, fetched over real HTTP via
+  ``GET /trace/<id>``, covers queue-wait, per-node fetch, decode, and
+  assembly,
+* ``GET /metrics`` serves Prometheus text whose request histograms
+  merge across 1/2/4-shard runs,
+* the flat ``dispatch()`` shim warns ``DeprecationWarning`` and returns
+  envelopes identical to ``url_dispatch``,
+* the structured access log / slow-request dump (silent by default,
+  ``REPRO_ACCESS_LOG=1`` / ``REPRO_SLOW_MS`` enable).
+"""
+import json
+import logging
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterStore, VolumeService
+from repro.cluster.api import url_dispatch
+from repro.cluster.handlers import dispatch
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+from repro.core.store import CuboidStore
+from repro.ft import ClusterWatch
+from repro.obs import log as obs_log
+from repro.obs import trace
+from repro.obs.hist import Histogram
+from repro.obs.registry import REGISTRY, Registry, metric
+from repro.serve.http_front import FrontDoor
+
+SHAPE = (32, 32, 16)
+CUBOID = (8, 8, 4)
+
+
+def spec(name="obs", **kw):
+    return DatasetSpec(name=name, volume_shape=SHAPE, dtype="uint8",
+                       base_cuboid=CUBOID, **kw)
+
+
+def volume(seed=0):
+    return np.random.default_rng(seed).integers(1, 255, size=SHAPE,
+                                                dtype=np.uint8)
+
+
+def http(method, url, body=None, headers=None):
+    req = urllib.request.Request(url, data=body, method=method,
+                                 headers=headers or {})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as resp:
+            return resp.status, dict(resp.headers), resp.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+@pytest.fixture
+def front():
+    base = volume(seed=1)
+    store = ClusterStore(spec(), n_nodes=3, replication=2,
+                         cache_bytes=8 << 20)
+    ingest(store, 0, base)
+    service = VolumeService()
+    service.add_dataset("obs", store)
+    with FrontDoor(service) as door:
+        yield door, base, store
+    store.close()
+
+
+# ------------------------------------------------------------- histograms --
+
+
+def test_histogram_merge_laws():
+    rng = np.random.default_rng(0)
+    a, b, c = Histogram(), Histogram(), Histogram()
+    for h, loc in ((a, -9.0), (b, -6.0), (c, -3.0)):
+        for v in rng.lognormal(loc, 2.0, size=200):
+            h.observe(float(v))
+    ab = a.merge(b)
+    assert ab.counts == b.merge(a).counts                      # commutative
+    assert ab.merge(c).counts == a.merge(b.merge(c)).counts    # associative
+    total = ab.merge(c)
+    assert total.count == 600 == sum(total.counts)             # conserved
+    assert total.sum == pytest.approx(a.sum + b.sum + c.sum)
+    assert a.count == b.count == c.count == 200                # inputs intact
+    # quantiles are monotone in q and bracket the merged mass
+    assert total.percentile(0.5) <= total.percentile(0.99)
+
+
+def test_histogram_exposition_is_cumulative():
+    reg = Registry()
+    h = reg.histogram("t_seconds", {"k": "v"}, "a histogram")
+    h.observe(0.001)
+    h.observe(1e9)  # overflow bucket still lands in +Inf
+    text = reg.prometheus_text(
+        extra=[metric("g", "gauge", "a gauge", [({"n": "0"}, 2.5)])])
+    assert "# TYPE t_seconds histogram" in text
+    assert 't_seconds_bucket{k="v",le="+Inf"} 2' in text
+    assert 't_seconds_count{k="v"} 2' in text
+    assert 'g{n="0"} 2.5' in text
+    buckets = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+               if line.startswith("t_seconds_bucket")]
+    assert buckets == sorted(buckets)  # cumulative: nondecreasing in le
+
+
+def test_request_histograms_merge_across_shard_counts():
+    """The same workload on 1/2/4-shard clusters produces per-run request
+    histograms a scraper can merge with conserved counts."""
+    reqs = 6
+    names = []
+    for n_nodes in (1, 2, 4):
+        name = f"obs_merge_{n_nodes}"
+        names.append(name)
+        store = ClusterStore(spec(name=name), n_nodes=n_nodes)
+        ingest(store, 0, volume(seed=2))
+        service = VolumeService()
+        service.add_dataset(name, store)
+        for _ in range(reqs):
+            env = url_dispatch(service, "GET", f"/{name}/cutout/0/0,16/0,16/0,8")
+            assert env["status"] == 200
+        store.close()
+    series = REGISTRY.histograms("repro_request_seconds")
+    hists = [series[(("dataset", n), ("path", "cutout"))] for n in names]
+    merged = hists[0].merge(hists[1]).merge(hists[2])
+    assert merged.count == 3 * reqs == sum(merged.counts)
+    lines = merged.prometheus_lines("repro_request_seconds", 'shard="all"')
+    assert lines[-1].endswith(str(3 * reqs))  # _count conserves the total
+
+
+# ---------------------------------------------------------------- tracing --
+
+
+def test_untraced_instrumentation_is_inert():
+    appended = trace.RING.counters()["appended"]
+    with trace.span("x", k=1) as meta:
+        assert meta is None  # the shared null span
+        trace.event("y")
+
+    def fn():
+        return 41
+
+    assert trace.bind(fn) is fn  # identity off-trace: no wrapper allocation
+    assert trace.RING.counters()["appended"] == appended
+
+
+def test_sampling_decision(monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE_SAMPLE", raising=False)
+    assert trace.maybe_start(None) is None           # default: never sample
+    assert trace.maybe_start("feedface00000001") is not None  # explicit: always
+    monkeypatch.setenv("REPRO_TRACE_SAMPLE", "1")
+    assert trace.maybe_start(None) is not None       # 1: every request
+
+
+def test_trace_tree_over_http(front):
+    door, _base, _store = front
+    tid = "0b5000000000c0de"
+    status, headers, _ = http(
+        "GET", f"{door.url}/v1/obs/cutout/0/0,16/8,24/0,8",
+        headers={"X-Trace-Id": tid})
+    assert status == 200
+    assert headers["X-Trace-Id"] == tid  # echoed so clients can correlate
+
+    status, _h, payload = http("GET", f"{door.url}/trace/{tid}")
+    env = json.loads(payload.decode())
+    assert status == 200 and env["trace"] == tid
+
+    names = []
+
+    def walk(spans, depth):
+        for s in spans:
+            names.append((depth, s["name"]))
+            assert s["dur_s"] >= 0
+            walk(s["children"], depth + 1)
+
+    walk(env["spans"], 0)
+    assert (0, "request") in names
+    flat = {n for _, n in names}
+    # queue wait -> plan -> per-node fetch -> decode -> assembly
+    # (store.fetch appears only below a cache miss; this read may be warm)
+    assert {"queue.wait", "plan", "assemble", "node.fetch", "decode"} <= flat
+    # node.fetch nests under assemble, decode under node.fetch
+    assert (2, "node.fetch") in names and (3, "decode") in names
+
+    status, _h, _p = http("GET", f"{door.url}/trace/ffffffffffffffff")
+    assert status == 404  # never sampled (or evicted)
+    status, _h, _p = http("POST", f"{door.url}/trace/{tid}", body=b"{}")
+    assert status == 405
+
+
+def test_metrics_over_http(front):
+    door, _base, _store = front
+    http("GET", f"{door.url}/v1/obs/cutout/0/0,8/0,8/0,4")
+    status, headers, payload = http("GET", f"{door.url}/metrics")
+    assert status == 200
+    assert headers["Content-Type"].startswith("text/plain; version=0.0.4")
+    text = payload.decode()
+    for family in ("repro_request_seconds_bucket", "repro_reads_total",
+                   "repro_cache_hits_total", "repro_nodes",
+                   "repro_replication", "repro_segment_heat_total",
+                   "repro_trace_ring"):
+        assert family in text, family
+    assert 'repro_replication{dataset="obs"} 2' in text
+    # dataset-scoped scrape and the guards
+    status, _h, scoped = http("GET", f"{door.url}/v1/obs/metrics")
+    assert status == 200 and b"repro_reads_total" in scoped
+    assert http("GET", f"{door.url}/nope/metrics")[0] == 404
+    assert http("POST", f"{door.url}/metrics", body=b"{}")[0] == 405
+
+
+# ------------------------------------------------- counters + concurrency --
+
+
+def test_counter_invariants_race_live_rebalance():
+    """Concurrent replicated reads racing a live rebalance: afterwards
+    every read was a cache hit or a miss, and inflight drains to 0."""
+    store = ClusterStore(spec(name="race"), n_nodes=3, replication=2,
+                         cache_bytes=8 << 20)
+    base = volume(seed=3)
+    ingest(store, 0, base)
+    store.flush()
+    errors = []
+
+    def reader(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(25):
+                lo = [int(rng.integers(0, s - 8)) for s in SHAPE]
+                hi = [a + 8 for a in lo]
+                got = cutout(store, 0, lo, hi)
+                sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+                np.testing.assert_array_equal(got, base[sl])
+        except Exception as e:  # surface on the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(50 + i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    store.rebalance(target=4)
+    store.rebalance(target=3)
+    for t in threads:
+        t.join(timeout=120)
+    try:
+        assert not errors, errors
+        rs, ws = store.read_stats, store.write_stats
+        assert rs.reads + ws.reads == rs.cache_hits + rs.cache_misses
+        assert rs.inflight == 0
+        assert all(n.read_stats.inflight == 0 for n in store.nodes)
+        heat = store.access_heat()
+        assert sum(n for _r, _b, n in heat["read"]) > 0
+    finally:
+        store.close()
+
+
+# ------------------------------------------------------------- satellites --
+
+
+def test_stats_reports_nodes_replication_partitions(front):
+    door, _base, store = front
+    http("GET", f"{door.url}/obs/cutout/0/0,16/0,16/0,8")
+    status, _h, payload = http("GET", f"{door.url}/obs/stats")
+    env = json.loads(payload.decode())
+    assert status == 200
+    assert len(env["nodes"]) == 3
+    agg = env["read"]["reads"]
+    assert agg == sum(n["read"]["reads"] for n in env["nodes"])
+    assert env["replication"] == 2
+    bounds = env["partitions"]["0"]
+    assert bounds == sorted(bounds) and len(bounds) == 4  # 3 nodes -> 4 cuts
+    assert env["heat"]["bits"] == store.heat_bits
+
+
+def test_dispatch_shim_warns_and_matches_url_router():
+    store = CuboidStore(spec(name="shim"))
+    ingest(store, 0, volume(seed=4))
+    service = VolumeService()
+    service.add_dataset("shim", store)
+    via_url = url_dispatch(service, "GET", "/shim/topology")
+    with pytest.warns(DeprecationWarning, match="url_dispatch"):
+        via_shim = dispatch(service, {"dataset": "shim",
+                                      "verb": "GET /topology"})
+    assert via_shim == via_url
+    with pytest.warns(DeprecationWarning):
+        assert dispatch(service, {}, "NO /verb")["status"] == 405
+
+
+def test_access_log_and_slow_request(front, monkeypatch):
+    door, _base, _store = front
+    records = []
+
+    class Capture(logging.Handler):
+        def emit(self, record):
+            records.append(json.loads(record.getMessage()))
+
+    handler = Capture()
+    obs_log.LOGGER.addHandler(handler)
+    try:
+        # silent by default: no access record without the env gate
+        http("GET", f"{door.url}/obs/topology")
+        assert not any(r["kind"] == "access" for r in records)
+        monkeypatch.setenv("REPRO_ACCESS_LOG", "1")
+        monkeypatch.setenv("REPRO_SLOW_MS", "0")  # everything is "slow"
+        tid = "51000000000000de"
+        http("GET", f"{door.url}/obs/cutout/0/0,8/0,8/0,4",
+             headers={"X-Trace-Id": tid})
+        access = [r for r in records if r["kind"] == "access"]
+        assert access and access[-1]["status"] == 200
+        assert access[-1]["trace"] == tid
+        slow = [r for r in records if r["kind"] == "slow_request"]
+        assert slow and slow[-1]["trace"] == tid
+        roots = [s["name"] for s in slow[-1]["spans"]]
+        assert "request" in roots  # the dump carries the span tree
+    finally:
+        obs_log.LOGGER.removeHandler(handler)
+
+
+def test_cluster_watch_advises_from_gauges():
+    store = ClusterStore(spec(name="watch"), n_nodes=2, write_behind=1 << 20)
+    ingest(store, 0, volume(seed=5))
+    try:
+        watch = ClusterWatch(store, skew=1.01, max_queue_depth=0)
+        actions = watch.step()
+        snap = watch.history[-1]
+        assert snap["n_nodes"] == 2 and sum(snap["keys_per_node"]) > 0
+        if snap["queue_depth"] > 0:  # ingest rode the write-behind queue
+            assert any(a["action"] == "flush" for a in actions)
+        store.flush()
+        assert all(a["action"] != "flush" for a in watch.step())
+    finally:
+        store.close()
