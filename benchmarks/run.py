@@ -55,7 +55,7 @@ def main(argv=None) -> None:
 
     from . import (cache_bench, cluster_bench, coldread_bench, figs,
                    frontdoor_bench, kernels_bench, obs_bench,
-                   rebalance_bench)
+                   rebalance_bench, tier_bench)
 
     sections = [
         ("fig10", figs.fig10_cutout_throughput),
@@ -66,6 +66,7 @@ def main(argv=None) -> None:
         ("cache", cache_bench.rows),
         ("coldread", coldread_bench.rows),
         ("rebalance", rebalance_bench.rows),
+        ("tier", tier_bench.rows),
         ("frontdoor", frontdoor_bench.rows),
         ("obs", obs_bench.rows),
         ("curves", kernels_bench.curve_panel_traffic),

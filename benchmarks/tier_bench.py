@@ -1,0 +1,181 @@
+"""Storage-tier benchmarks: read latency under a sustained write load.
+
+The acceptance number for the tier split (paper §4.1's SSD-write /
+disk-read separation): with a single fsync-on `DirectoryBackend` serving
+both paths, every durable write costs a per-file
+write+fsync+rename+fsync, and concurrent readers queue behind that
+traffic.  The tiered store lands the same writes as sequential appends
+on a `LogBackend` (one fsync per batch) while a background `Compactor`
+trickles sealed segments into the read tier — so the read path keeps its
+curve-sequential layout and its p99 stops inheriting the writer's sync
+stalls.
+
+Rows per mode (``single`` = one fsync-on directory backend both paths,
+``tiered`` = log write tier + compacted read tier + background
+compactor):
+
+  * ``write``     — mean latency of one durable cuboid write,
+  * ``read_p99``  — p99 cutout latency while the writer hammers,
+  * plus a ``derived`` identity flag: after quiescing (flush + final
+    compaction) every key written during the run must read back equal to
+    the last value the writer recorded for it, and the surviving volume
+    must match a `MemoryBackend` oracle replay — the tiers may never buy
+    latency with correctness.
+
+``BENCH_PRESET=tiny`` shrinks the run for the CI smoke job.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.compact import Compactor
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+from repro.core.store import CuboidStore, DirectoryBackend
+from repro.core.wal import TierPolicy, tiered_store
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    return (64, 64, 32) if preset() == "tiny" else (128, 128, 64)
+
+
+def _cuboid():
+    return (16, 16, 8)
+
+
+def _spec(shape):
+    return DatasetSpec(name="tier_bench", volume_shape=shape,
+                       dtype="uint8", base_cuboid=_cuboid())
+
+
+def _volume(shape):
+    rng = np.random.default_rng(23)
+    x = np.linspace(0.0, 8 * np.pi, shape[0], dtype=np.float32)
+    base = 96.0 + 64.0 * np.sin(x)[:, None, None]
+    noise = rng.integers(0, 24, size=shape).astype(np.float32)
+    return np.clip(base + noise, 0, 255).astype(np.uint8)
+
+
+def _build(mode: str, root: str, shape):
+    if mode == "single":
+        # the pre-split store: one directory backend, durable writes
+        # pay write+fsync+rename+fsync inline on the serving path
+        return CuboidStore(_spec(shape),
+                           backend=DirectoryBackend(root, fsync=True))
+    return tiered_store(_spec(shape), root=root,
+                        policy=TierPolicy(write_tier="log", fsync=True))
+
+
+def _measure(mode: str, shape, vol, n_reads: int, read_boxes) -> Dict:
+    n_cells = int(np.prod([s // c for s, c in zip(shape, _cuboid())]))
+    with tempfile.TemporaryDirectory(prefix=f"ocp-tier-{mode}-") as root:
+        store = _build(mode, root, shape)
+        ingest(store, 0, vol)
+        compactor = None
+        if mode == "tiered":
+            compactor = Compactor(store, interval=0.01, min_sealed=1)
+            store.compact()  # start the run with a drained log
+            compactor.start()
+
+        stop = threading.Event()
+        written: Dict[int, int] = {}   # morton -> fill value last written
+        write_ns: List[int] = []
+        errors: List[BaseException] = []
+
+        def writer():
+            rng = np.random.default_rng(5)
+            i = 0
+            try:
+                while not stop.is_set():
+                    m = int(rng.integers(0, n_cells))
+                    i += 1
+                    fill = 1 + (i % 250)
+                    data = np.full(_cuboid(), fill, dtype=np.uint8)
+                    t0 = time.perf_counter_ns()
+                    store.write_cuboid(0, m, data)
+                    write_ns.append(time.perf_counter_ns() - t0)
+                    written[m] = fill
+            except BaseException as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+
+        t = threading.Thread(target=writer)
+        t.start()
+        read_ns = []
+        try:
+            for k in range(n_reads):
+                lo, hi = read_boxes[k % len(read_boxes)]
+                t0 = time.perf_counter_ns()
+                cutout(store, 0, lo, hi)
+                read_ns.append(time.perf_counter_ns() - t0)
+        finally:
+            stop.set()
+            t.join()
+            if compactor is not None:
+                compactor.stop()
+        if errors:
+            raise errors[0]
+
+        # quiesce, then the identity gate: last-write-wins vs the
+        # writer's own record AND vs a memory-oracle replay of the run
+        store.flush()
+        store.compact()
+        oracle = CuboidStore(_spec(shape))
+        ingest(oracle, 0, vol)
+        for m, fill in written.items():
+            oracle.write_cuboid(
+                0, m, np.full(_cuboid(), fill, dtype=np.uint8))
+        identical = all(
+            np.array_equal(store.read_cuboid(0, m), oracle.read_cuboid(0, m))
+            for m in range(n_cells))
+        compactions = dict(store.compactions)
+        store.close()
+    return {
+        "write_us": float(np.mean(write_ns)) / 1e3 if write_ns else 0.0,
+        "read_p99_us": float(np.percentile(read_ns, 99)) / 1e3,
+        "read_mean_us": float(np.mean(read_ns)) / 1e3,
+        "writes": len(write_ns),
+        "identical": identical,
+        "compaction_runs": compactions["runs"],
+    }
+
+
+def rows() -> List[Dict]:
+    shape = _shape()
+    vol = _volume(shape)
+    n_reads = 100 if preset() == "tiny" else 200
+    read_boxes = [((0, 0, 0), shape),
+                  (tuple(c // 2 for c in _cuboid()),
+                   tuple(s - 3 for s in shape))]
+    out: List[Dict] = []
+    results = {mode: _measure(mode, shape, vol, n_reads, read_boxes)
+               for mode in ("single", "tiered")}
+    for mode, r in results.items():
+        derived = (f"identical={r['identical']};writes={r['writes']}"
+                   f";read_mean={r['read_mean_us']:.0f}us"
+                   f";write={r['write_us']:.0f}us")
+        if mode == "tiered":
+            base = results["single"]
+            derived += (f";p99_vs_single="
+                        f"{base['read_p99_us'] / max(r['read_p99_us'], 1e-9):.2f}x"
+                        f";write_vs_single="
+                        f"{base['write_us'] / max(r['write_us'], 1e-9):.2f}x"
+                        f";compactions={r['compaction_runs']}")
+        out.append({"name": f"tier/{mode}/{shape[0]}",
+                    "us_per_call": r["read_p99_us"],
+                    "derived": derived})
+    return out
+
+
+if __name__ == "__main__":
+    for row in rows():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

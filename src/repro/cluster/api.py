@@ -26,6 +26,7 @@ GET    /<project>/objects/<id>/boundingbox[/<r>]      GET /objects/boundingbox
 GET    /<project>/objects/<id>/cutout[/<r>[/<box...>]] GET /objects/cutout
 POST   /<dataset>/batch/cutout                        POST /batch/cutout
 POST   /<dataset>/flush  (or bare /flush)             POST /flush
+POST   /<dataset>/compact  (or bare /compact)         POST /compact
 GET    /<dataset>/stats                               GET /stats
 GET    /<dataset>/metrics  (or bare /metrics)         GET /metrics
 GET    /trace/<id>                                    GET /trace
@@ -98,10 +99,10 @@ def parse_url(method: str, path: str) -> Tuple[str, Request]:
     if not parts:
         raise ApiError(404, "no route for /")
 
-    if parts == ["flush"]:
+    if parts in (["flush"], ["compact"]):
         if method != "POST":
-            raise ApiError(405, f"{method} not allowed on /flush")
-        return "POST /flush", {}
+            raise ApiError(405, f"{method} not allowed on /{parts[0]}")
+        return f"POST /{parts[0]}", {}
 
     # Observability surface.  Bare /metrics scrapes every dataset (the
     # Prometheus convention); /trace is cluster-wide by construction —
@@ -185,8 +186,8 @@ def parse_url(method: str, path: str) -> Tuple[str, Request]:
             return "POST /nodes/remove", {"dataset": name, "node": _int(rest[1], "node index")}
         raise ApiError(405, f"{method} /{'/'.join(parts)} not allowed on nodes")
 
-    if head in ("stats", "metrics", "topology", "flush", "rebalance") and len(rest) == 1:
-        expected = "POST" if head in ("flush", "rebalance") else "GET"
+    if head in ("stats", "metrics", "topology", "flush", "compact", "rebalance") and len(rest) == 1:
+        expected = "POST" if head in ("flush", "compact", "rebalance") else "GET"
         if method != expected:
             raise ApiError(405, f"{method} not allowed on {head} (use {expected})")
         return f"{expected} /{head}", {"dataset": name}

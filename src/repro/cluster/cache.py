@@ -620,14 +620,20 @@ def enable_write_behind(store, max_items: int = 512, batch_items: int = 64) -> W
 
     Puts land on the store's write path (the SSD-node analogue when a
     write backend is attached); deletes clear *both* paths so a lazy-zero
-    write can never resurrect stale read-path data after the flush.
-    Applies run under the store lock, serializing with ``migrate()``.
+    write can never resurrect stale read-path data after the flush —
+    except on a tombstone-capable write tier (the append log), where the
+    delete is one durable tombstone that *shadows* the read path until
+    compaction applies it.  Applies run under the store lock, serializing
+    with ``migrate()``.
     """
     target = store.write_backend or store.read_backend
 
-    def _delete(key: Key) -> None:
-        target.delete(key)
-        store.read_backend.delete(key)
+    if target.supports_tombstones:
+        _delete = target.delete
+    else:
+        def _delete(key: Key) -> None:
+            target.delete(key)
+            store.read_backend.delete(key)
 
     queue = WriteBehindQueue(
         put_many=target.put_many,

@@ -418,6 +418,39 @@ def post_flush(service: VolumeService, request: Request) -> Response:
     return {"status": 200, "flushed": flushed, "total": sum(flushed.values())}
 
 
+def post_compact(service: VolumeService, request: Request) -> Response:
+    """``POST /compact`` — merge flushed log segments into the read tier.
+
+    Targets the named dataset (or every dataset without a ``dataset``
+    key).  Each store compacts every node shard whose write tier is an
+    append log; stores without one compact trivially (all-zero stats).
+    ``{"max_segments": n}`` bounds the work per node — the trickle shape
+    the background compactor uses, versus this verb's default full drain.
+    """
+    name = request.get("dataset")
+    if name is not None and name not in service.datasets:
+        return _error(404, f"unknown dataset {name!r}")
+    targets = [name] if name is not None else list(service.datasets)
+    try:
+        max_segments = request.get("max_segments")
+        max_segments = None if max_segments is None else int(max_segments)
+    except (TypeError, ValueError):
+        return _error(400, f"bad max_segments {request.get('max_segments')!r}")
+    compacted = {}
+    for n in targets:
+        store = service.datasets[n]
+        if not hasattr(store, "compact"):
+            compacted[n] = {"segments": 0, "keys": 0, "tombstones": 0, "bytes": 0, "seconds": 0.0}
+            continue
+        stats = store.compact(max_segments)
+        compacted[n] = stats if isinstance(stats, dict) else stats.asdict()
+    return {
+        "status": 200,
+        "compacted": compacted,
+        "total_keys": sum(int(c["keys"]) for c in compacted.values()),
+    }
+
+
 def get_stats(service: VolumeService, request: Request) -> Response:
     """``GET /stats`` — path/cache/queue counters for one dataset.
 
@@ -457,6 +490,14 @@ def get_stats(service: VolumeService, request: Request) -> Response:
         }
     if hasattr(store, "access_heat"):
         body["heat"] = store.access_heat(top=_HEAT_TOP)
+    # Storage-tier gauges: cluster aggregate when available, else the
+    # single store's own tier report (log segment/index sizes, lifetime
+    # compaction totals) — the signal the supervisor's compaction trigger
+    # and a capacity dashboard read.
+    if hasattr(store, "tier_counters"):
+        body["tiers"] = store.tier_counters()
+    elif hasattr(store, "tier_stats"):
+        body["tiers"] = store.tier_stats()
     pol = getattr(store, "decode_policy", None)
     if pol is None and hasattr(store, "nodes"):  # cluster on node defaults
         nodes = store.nodes
@@ -593,6 +634,7 @@ HANDLERS: Dict[str, Callable[[VolumeService, Request], Response]] = {
     "GET /objects/cutout": get_object_cutout,
     "POST /batch/cutout": post_batch_cutout,
     "POST /flush": post_flush,
+    "POST /compact": post_compact,
     "GET /stats": get_stats,
     "GET /metrics": get_metrics,
     "GET /trace": get_trace,

@@ -98,7 +98,17 @@ class RebalanceInFlight(RuntimeError):
 
 
 def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
-    """In-memory node with a separated write path (SSD-node analogue)."""
+    """In-memory node with a separated write path (SSD-node analogue).
+
+    Under ``REPRO_WRITE_TIER=log|dir`` the node gets the on-disk
+    `TierPolicy` pair instead (append-log or directory write tier over a
+    compacted read tier, in a scratch root the store owns) — the CI
+    tier-matrix leg runs the whole suite through the log tier this way.
+    """
+    if os.environ.get("REPRO_WRITE_TIER", "") in ("log", "dir"):
+        from ..core.wal import tiered_store
+
+        return tiered_store(spec)
     return CuboidStore(spec, backend=MemoryBackend(), write_path_backend=MemoryBackend())
 
 
@@ -321,6 +331,60 @@ class ClusterStore:
             nodes = self._topo.nodes
             jobs = {i: nodes[i].flush for i in range(len(nodes))}
             return sum(self._fan_out(jobs).values())
+
+    def compact(self, max_segments: Optional[int] = None) -> Dict[str, object]:
+        """Fan ``CuboidStore.compact()`` out to every node: merge each
+        shard's flushed log segments into its read tier (no-op per node
+        without a log write tier).  The aggregate is what
+        ``POST /compact`` returns."""
+        with self._gate.op():
+            nodes = self._topo.nodes
+            jobs = {
+                i: functools.partial(nodes[i].compact, max_segments)
+                for i in range(len(nodes))
+            }
+            results = self._fan_out(jobs)
+        agg = {"segments": 0, "keys": 0, "tombstones": 0, "bytes": 0, "seconds": 0.0}
+        for stats in results.values():
+            d = stats.asdict()
+            for k in agg:
+                agg[k] += d[k]
+        agg["nodes"] = len(results)
+        return agg
+
+    def tier_counters(self) -> Dict[str, object]:
+        """Cluster-wide tier gauges: per-node ``tier_stats`` summed (the
+        ``tiers`` section of ``GET /stats`` and the supervisor's
+        log-pressure signal)."""
+        with self._gate.op():
+            nodes = self._topo.nodes
+        agg: Dict[str, object] = {
+            "nodes": len(nodes),
+            "log_nodes": 0,
+            "sealed": 0,
+            "log_bytes": 0,
+            "live_keys": 0,
+            "tombstones": 0,
+            "torn_truncated": 0,
+            "compactions": {
+                "runs": 0,
+                "segments": 0,
+                "keys": 0,
+                "tombstones": 0,
+                "bytes": 0,
+                "seconds": 0.0,
+            },
+        }
+        for node in nodes:
+            ts = node.tier_stats()
+            for k, v in ts["compactions"].items():
+                agg["compactions"][k] += v
+            log = ts.get("log")
+            if log:
+                agg["log_nodes"] += 1
+                for k in ("sealed", "log_bytes", "live_keys", "tombstones", "torn_truncated"):
+                    agg[k] += log[k]
+        return agg
 
     def close(self) -> None:
         for node in self._topo.nodes:
@@ -665,6 +729,10 @@ class ClusterStore:
                 "elastic": True,
                 "rebalancing": bool(self._moves),
                 "replication": topo.router.n_replicas,
+                # effective vs achievable target: a gap means segments are
+                # under-replicated (ring shrank below N, or riders joined
+                # outside the router) and re_replicate() can heal it
+                "replication_target": min(self.replication, len(topo.nodes)),
                 "segments": segments,
                 "keys_per_node": self._key_counts(topo),
                 "cache_nodes": sum(1 for n in topo.nodes if n.cache is not None),
@@ -816,6 +884,69 @@ class ClusterStore:
             ).observe(seconds)
             return {
                 "n_nodes": n_new,
+                "moved_keys": moved_keys,
+                "moved_bytes": moved_bytes,
+                "seconds": seconds,
+            }
+        finally:
+            self._admin_lock.release()
+
+    def re_replicate(self, wait: bool = True) -> Dict[str, object]:
+        """Heal under-replication: bring every curve segment back up to
+        ``min(replication, n_nodes)`` copies through the live-migration
+        copy path.
+
+        The gap this closes: after the ring shrinks below ``replication``
+        (``remove_node`` down to fewer nodes than N) and a node later
+        joins with ``add_node(rebalance=False)``, the rider sits *outside*
+        the router — no successor ring includes it, so every segment stays
+        under-replicated forever unless a full rebalance happens to run.
+        This verb widens the router over the riders **without moving any
+        partition boundary** (they own empty segments) and lets the
+        replica-set diff copy each range to its new ring members — cheaper
+        and less disruptive than a rebalance, and safe under the same
+        coherence protocol.  Idempotent: a fully-replicated cluster
+        returns ``healed=False`` with zero copies.
+        """
+        if not self._admin_lock.acquire(blocking=wait):
+            raise RebalanceInFlight("a topology change is already in flight")
+        try:
+            t0 = time.perf_counter()
+            topo = self._topo
+            n = len(topo.nodes)
+            target = min(self.replication, n)
+            if topo.router.n_nodes == n and topo.router.n_replicas >= target:
+                return {
+                    "n_nodes": n,
+                    "replication": topo.router.n_replicas,
+                    "healed": False,
+                    "moved_keys": 0,
+                    "moved_bytes": 0,
+                    "seconds": time.perf_counter() - t0,
+                }
+            final_parts = {}
+            for r in range(self.spec.n_resolutions):
+                part = topo.router.partition(r)
+                extra = n - topo.router.n_nodes
+                if extra > 0:
+                    # widen with trailing empty segments: riders enter the
+                    # successor rings but own no primary range
+                    part = Partition(part.bounds + (part.n_cells,) * extra)
+                final_parts[r] = part
+            final_router = Router(self.spec, n, final_parts, self.replication)
+            moved_keys, moved_bytes = self._migrate_live(
+                topo, final_router, list(range(n)), topo.nodes
+            )
+            seconds = time.perf_counter() - t0
+            REGISTRY.histogram(
+                "repro_migration_seconds",
+                {"op": "re_replicate"},
+                "live topology-change duration by admin op",
+            ).observe(seconds)
+            return {
+                "n_nodes": n,
+                "replication": self._topo.router.n_replicas,
+                "healed": True,
                 "moved_keys": moved_keys,
                 "moved_bytes": moved_bytes,
                 "seconds": seconds,

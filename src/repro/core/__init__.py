@@ -2,4 +2,4 @@
 
 See DESIGN.md §1 for the mapping from paper mechanisms (C1-C8) to modules.
 """
-from . import morton, cuboid, store, cutout, spatial_index, annotations  # noqa: F401
+from . import morton, cuboid, store, wal, compact, cutout, spatial_index, annotations  # noqa: F401

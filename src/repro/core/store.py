@@ -46,6 +46,41 @@ BlockSink = Callable[[int, Optional[np.ndarray]], None]
 _MISS = object()  # sentinel: "not in the prefetch handoff" (None = absent)
 
 
+def _env_flag(name: str, default: bool) -> bool:
+    raw = os.environ.get(name, "")
+    if raw == "":
+        return default
+    return raw.lower() not in ("0", "false", "no", "off")
+
+
+# -- crash injection (tests only) -----------------------------------------
+# The durability contract ("no torn cuboids, acked writes survive") is only
+# testable if a crash can be simulated at the exact syscall boundaries the
+# contract is about.  Tests install a hook that raises at a named point;
+# production never sets one, so crashpoint() is a no-op attribute load.
+_CRASH_HOOK: Optional[Callable[[str], None]] = None
+
+
+def set_crash_hook(hook: Optional[Callable[[str], None]]) -> None:
+    """Install (or clear, with ``None``) the process-wide crash hook."""
+    global _CRASH_HOOK
+    _CRASH_HOOK = hook
+
+
+def crashpoint(name: str) -> None:
+    """Named crash-injection point; calls the installed hook, if any.
+
+    Points on the durable-put path: ``dir.put.written`` (tmp file written,
+    not yet synced), ``dir.put.synced`` (tmp durable, not yet published),
+    ``dir.put.renamed`` (published, directory entry not yet synced);
+    ``wal.append.written`` / ``wal.append.synced`` on the log tier;
+    ``compact.copied`` / ``compact.segment-removed`` during compaction.
+    """
+    hook = _CRASH_HOOK
+    if hook is not None:
+        hook(name)
+
+
 @dataclasses.dataclass(frozen=True)
 class DecodePolicy:
     """Cold-read pipeline knobs (paper §5: cutouts are assembly-bound).
@@ -128,6 +163,7 @@ class PathStats:
     decode_s: float = 0.0    # wall time inside decompress (incl. workers)
     prefetch_issued: int = 0    # schedule-lookahead prefetch tasks launched
     prefetch_cuboids: int = 0   # blobs the prefetcher admitted to the cache
+    tmp_swept: int = 0          # orphaned .tmp files removed on backend open
 
     def snapshot(self) -> "PathStats":
         return dataclasses.replace(self)
@@ -135,6 +171,11 @@ class PathStats:
 
 class Backend:
     """Minimal KV backend for compressed cuboids."""
+
+    # Backends that record deletes as durable tombstones (the append-log
+    # write tier) set this; a tombstone must *shadow* older data below it
+    # in the tier stack until compaction applies the delete for real.
+    supports_tombstones = False
 
     def get(self, key: Key) -> Optional[bytes]:
         raise NotImplementedError
@@ -162,14 +203,34 @@ class Backend:
         for k, blob in items:
             self.put(k, blob)
 
+    # -- tombstone-aware lookup: (found, blob) ------------------------------
+    # ``(True, None)`` means "definitively deleted here" — the merged read
+    # view must stop and not fall through to a stale copy below.  For plain
+    # backends found == (blob is not None), so these defaults change nothing.
+    def probe(self, key: Key) -> Tuple[bool, Optional[bytes]]:
+        blob = self.get(key)
+        return blob is not None, blob
+
+    def probe_many(
+        self, keys: Sequence[Key]
+    ) -> List[Tuple[bool, Optional[bytes]]]:
+        return [(b is not None, b) for b in self.get_many(keys)]
+
 
 class MemoryBackend(Backend):
+    # Every accessor takes the lock: ``keys()`` snapshotting the dict while
+    # the write-behind flusher lands a ``put_many`` raised ``RuntimeError:
+    # dictionary changed size during iteration`` mid-rebalance, and the
+    # single-op reads ride along for a coherent view (the lock is
+    # uncontended in the common case and dict ops are short).
+
     def __init__(self):
         self._d: Dict[Key, bytes] = {}
         self._lock = threading.Lock()
 
     def get(self, key):
-        return self._d.get(key)
+        with self._lock:
+            return self._d.get(key)
 
     def put(self, key, blob):
         with self._lock:
@@ -180,14 +241,17 @@ class MemoryBackend(Backend):
             self._d.pop(key, None)
 
     def keys(self):
-        return list(self._d.keys())
+        with self._lock:
+            return list(self._d.keys())
 
     def __contains__(self, key):
-        return key in self._d
+        with self._lock:
+            return key in self._d
 
     def get_many(self, keys):
-        d = self._d
-        return [d.get(k) for k in keys]
+        with self._lock:
+            d = self._d
+            return [d.get(k) for k in keys]
 
     def put_many(self, items):
         with self._lock:
@@ -199,11 +263,58 @@ class DirectoryBackend(Backend):
 
     Mirrors the paper's CATMAID re-layout (§3.3): grouping by resolution
     first keeps each directory a single access plane and bounds dirsize.
+
+    Durability: ``put`` writes a ``.tmp`` sibling and publishes it with an
+    atomic rename.  With ``fsync`` on (explicit arg, else ``REPRO_FSYNC``,
+    else off for this bulk read tier) the tmp file is synced *before* the
+    rename — so the published name can never point at torn or zero-length
+    data — and the directory is synced *after*, so an acked write survives
+    a crash.  Orphaned ``.tmp`` files from interrupted puts are swept on
+    open and counted in ``swept_tmp`` (surfaced as ``PathStats.tmp_swept``).
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, fsync: Optional[bool] = None):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        if fsync is None:
+            fsync = _env_flag("REPRO_FSYNC", default=False)
+        self.fsync = bool(fsync)
+        self._synced_dirs: set = set()
+        self.swept_tmp = self._sweep_tmp()
+
+    def _sweep_tmp(self) -> int:
+        swept = 0
+        for dirpath, _dirs, files in os.walk(self.root):
+            for fn in files:
+                if fn.endswith(".tmp"):
+                    with contextlib.suppress(OSError):
+                        os.remove(os.path.join(dirpath, fn))
+                        swept += 1
+        return swept
+
+    @staticmethod
+    def _sync_dir(path: str) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def _ensure_dir(self, d: str) -> None:
+        if d in self._synced_dirs:
+            return
+        fresh = not os.path.isdir(d)
+        os.makedirs(d, exist_ok=True)
+        if fresh and self.fsync:
+            # first creation: sync the new directory entries up to the root
+            # so the r/channel tree itself survives a crash
+            step = d
+            while True:
+                self._sync_dir(step)
+                if os.path.samefile(step, self.root):
+                    break
+                step = os.path.dirname(step)
+        self._synced_dirs.add(d)
 
     def _path(self, key: Key) -> str:
         r, c, m = key
@@ -221,11 +332,19 @@ class DirectoryBackend(Backend):
 
     def put(self, key, blob):
         p = self._path(key)
-        os.makedirs(os.path.dirname(p), exist_ok=True)
+        self._ensure_dir(os.path.dirname(p))
         tmp = p + ".tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
-        os.replace(tmp, p)  # atomic
+            crashpoint("dir.put.written")
+            if self.fsync:
+                f.flush()
+                os.fsync(f.fileno())  # data durable BEFORE the name flips
+        crashpoint("dir.put.synced")
+        os.replace(tmp, p)  # atomic publish
+        crashpoint("dir.put.renamed")
+        if self.fsync:
+            self._sync_dir(os.path.dirname(p))  # make the rename durable
 
     def delete(self, key):
         try:
@@ -315,6 +434,17 @@ class CuboidStore:
         self.write_stats = PathStats()
         self._np_dtype = np.dtype(spec.dtype)
         self._lock = threading.Lock()
+        self.read_stats.tmp_swept = getattr(self.read_backend, "swept_tmp", 0)
+        if self.write_backend is not None:
+            self.write_stats.tmp_swept = getattr(
+                self.write_backend, "swept_tmp", 0)
+        # Lifetime compaction totals (log tier → read tier merges); updated
+        # by repro.core.compact, surfaced through tier_stats()/GET /stats.
+        self.compactions: Dict[str, float] = {
+            "runs": 0, "segments": 0, "keys": 0, "tombstones": 0,
+            "bytes": 0, "seconds": 0.0}
+        self.tier_policy = None           # set by wal.tiered_store
+        self._tier_tmpdir = None          # owned scratch root (tiered_store)
         self.cache = cache                # duck-typed CuboidCache | None
         self.write_behind = None          # duck-typed WriteBehindQueue | None
         # Serializes same-key write *order* across tiers (queue/backends vs
@@ -357,10 +487,22 @@ class CuboidStore:
         return n
 
     def close(self) -> None:
-        """Flush and detach the write-behind queue (stops its flusher)."""
+        """Flush and detach the write-behind queue (stops its flusher);
+        release backend file handles (log-tier backends reopen lazily, so
+        a closed store's data stays readable) and clean up a scratch root
+        owned via ``wal.tiered_store``."""
         if self.write_behind is not None:
             self.write_behind.close()  # flushes; pending stays readable until drained
             self.write_behind = None
+        for backend in (self.write_backend, self.read_backend):
+            closer = getattr(backend, "close", None)
+            if callable(closer):
+                closer()
+        tmpdir = self._tier_tmpdir
+        if tmpdir is not None:
+            self._tier_tmpdir = None
+            with contextlib.suppress(OSError):
+                tmpdir.cleanup()
 
     def __enter__(self):
         return self
@@ -398,12 +540,19 @@ class CuboidStore:
         if idx:
             sub = [keys[i] for i in idx]
             fetched: List[Optional[bytes]] = [None] * len(sub)
+            settled = [False] * len(sub)
             if self.write_backend is not None:
-                fetched = list(self.write_backend.get_many(sub))
-                hits = [b for b in fetched if b is not None]
-                wp_reads = len(hits)
-                wp_bytes = sum(len(b) for b in hits)
-            still = [j for j, b in enumerate(fetched) if b is None]
+                # probe, not get: a log-tier tombstone is (found, None) —
+                # a definitive absence that must NOT fall through to a
+                # stale copy still sitting on the read tier
+                for j, (found, blob) in enumerate(
+                        self.write_backend.probe_many(sub)):
+                    if found:
+                        fetched[j] = blob
+                        settled[j] = True
+                        wp_reads += 1
+                        wp_bytes += len(blob) if blob is not None else 0
+            still = [j for j in range(len(sub)) if not settled[j]]
             if still:
                 got = self.read_backend.get_many([sub[j] for j in still])
                 for j, blob in zip(still, got):
@@ -461,6 +610,10 @@ class CuboidStore:
                 self.write_stats.queue_peak = self.write_behind.depth_peak
             else:
                 target = self.write_backend or self.read_backend
+                # A tombstone-capable write tier shadows the read path
+                # until compaction applies the delete; other targets need
+                # the read-path copy cleared immediately.
+                shadow = target.supports_tombstones
                 puts = [(k, b) for k, b in items if b is not None]
                 with self._lock:
                     for k, b in items:
@@ -468,7 +621,8 @@ class CuboidStore:
                             # lazy allocation: all-zero cuboids occupy no
                             # storage on either path
                             target.delete(k)
-                            self.read_backend.delete(k)
+                            if not shadow:
+                                self.read_backend.delete(k)
                     if puts:
                         target.put_many(puts)
             if self.cache is not None:
@@ -528,8 +682,10 @@ class CuboidStore:
             found, blob = self.write_behind.peek(key)
             if found:
                 return blob is not None
-        if self.write_backend is not None and key in self.write_backend:
-            return True
+        if self.write_backend is not None:
+            found, blob = self.write_backend.probe(key)
+            if found:
+                return blob is not None  # tombstone = definitively absent
         return key in self.read_backend
 
     # -- run (batch/sequential) ops ----------------------------------------
@@ -1024,6 +1180,11 @@ class CuboidStore:
         self.flush()
         if self.write_backend is None:
             return 0
+        if self.write_backend.supports_tombstones:
+            # log write tier: migration IS compaction — the Morton-ordered
+            # merge applies tombstones too (the plain loop below would
+            # leave a tombstoned key's stale read-tier copy behind)
+            return int(self.compact().keys)
         n = 0
         for key in list(self.write_backend.keys()):
             with self._lock:
@@ -1035,21 +1196,49 @@ class CuboidStore:
             n += 1
         return n
 
-    def stored_keys(self) -> List[Key]:
-        self.flush()  # pending write-behind writes count as stored
+    def compact(self, max_segments: Optional[int] = None):
+        """Merge flushed log segments into the read tier in Morton order.
+
+        Returns a ``repro.core.compact.CompactionStats`` (all zeros when
+        the write tier is not an append log)."""
+        from .compact import compact_store  # local: compact imports us
+        return compact_store(self, max_segments=max_segments)
+
+    def tier_stats(self) -> Dict[str, object]:
+        """Tier gauges for ``GET /stats``: which backend serves each path,
+        lifetime compaction totals, and (log tier) segment/index gauges."""
+        wb = self.write_backend
+        out: Dict[str, object] = {
+            "read_tier": type(self.read_backend).__name__,
+            "write_tier": type(wb).__name__ if wb is not None else None,
+            "compactions": dict(self.compactions),
+        }
+        log_stats = getattr(wb, "stats", None)
+        if callable(log_stats):
+            out["log"] = log_stats()
+        return out
+
+    def _live_backend_keys(self) -> set:
+        """Union of backend keys minus write-tier tombstones (a tombstone
+        shadows — and thus un-stores — any read-tier copy below it)."""
         keys = set(self.read_backend.keys())
         if self.write_backend is not None:
             keys |= set(self.write_backend.keys())
-        return sorted(keys)
+            tombs = getattr(self.write_backend, "tombstone_keys", None)
+            if callable(tombs):
+                keys -= tombs()
+        return keys
+
+    def stored_keys(self) -> List[Key]:
+        self.flush()  # pending write-behind writes count as stored
+        return sorted(self._live_backend_keys())
 
     def key_count(self) -> int:
         """Stored-key count *without* the flush barrier: pending
         write-behind puts/deletes are folded in from a queue snapshot.
         The cheap occupancy gauge topology polling wants — a monitoring
         loop must not drain the write-behind queue it is observing."""
-        keys = set(self.read_backend.keys())
-        if self.write_backend is not None:
-            keys |= set(self.write_backend.keys())
+        keys = self._live_backend_keys()
         if self.write_behind is not None:
             puts, dels = self.write_behind.pending_keys()
             keys = (keys | puts) - dels

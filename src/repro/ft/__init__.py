@@ -1,5 +1,5 @@
-from .supervisor import (ClusterWatch, FailureInjector, StragglerMonitor,
-                         TrainingSupervisor, WorkerFailure)
+from .supervisor import (ClusterWatch, FailureInjector, StorageSupervisor,
+                         StragglerMonitor, TrainingSupervisor, WorkerFailure)
 
-__all__ = ["ClusterWatch", "FailureInjector", "StragglerMonitor",
-           "TrainingSupervisor", "WorkerFailure"]
+__all__ = ["ClusterWatch", "FailureInjector", "StorageSupervisor",
+           "StragglerMonitor", "TrainingSupervisor", "WorkerFailure"]

@@ -15,9 +15,13 @@ supervisor wraps the step loop:
     re-issued to the steal queue (pipeline.overdecompose),
   * storage-tier watching: `ClusterWatch` polls the data cluster's
     observability gauges (key occupancy, write-behind queue depth,
-    per-segment access heat) and advises the live control verbs —
-    ``POST /rebalance`` on occupancy skew, ``POST /flush`` on queue
-    pressure.
+    sealed log segments, replication health, per-segment access heat)
+    and advises the live control verbs — ``POST /rebalance`` on
+    occupancy skew, ``POST /flush`` on queue pressure, ``POST /compact``
+    on log backlog, ``re_replicate`` on a replication gap; and
+    `StorageSupervisor` closes that loop by *executing* the advice on a
+    background tick (the driver behind background compaction and
+    re-replication).
 
 On a real cluster the failure signal comes from the coordinator
 (jax.distributed heartbeats); here `FailureInjector` produces deterministic
@@ -26,6 +30,7 @@ failures so recovery is testable.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -98,26 +103,39 @@ class ClusterWatch:
     """
 
     def __init__(self, store, skew: float = 1.5, max_queue_depth: int = 256,
-                 heat_top: int = 4):
+                 heat_top: int = 4, max_sealed_segments: int = 1):
         self.store = store
         self.skew = skew                    # max/mean occupancy ratio that trips
         self.max_queue_depth = max_queue_depth
         self.heat_top = heat_top
+        # sealed log segments across the cluster that trip "compact"
+        self.max_sealed_segments = max_sealed_segments
         self.history: List[Dict] = []
 
     def sample(self) -> Dict:
         """One gauge snapshot, appended to ``history``."""
         topo = (self.store.topology() if hasattr(self.store, "topology")
                 else {"n_nodes": 1, "keys_per_node": []})
+        replication = int(topo.get("replication", 1))
         snap: Dict = {
             "n_nodes": int(topo["n_nodes"]),
             "rebalancing": bool(topo.get("rebalancing", False)),
             "keys_per_node": [int(k) for k in topo.get("keys_per_node", [])],
+            "replication": replication,
+            "replication_target": int(
+                topo.get("replication_target", replication)),
             "queue_depth": 0,
+            "sealed_segments": 0,
             "hot": [],
         }
         if hasattr(self.store, "queue_counters"):
             snap["queue_depth"] = int(self.store.queue_counters().get("depth", 0))
+        if hasattr(self.store, "tier_counters"):
+            snap["sealed_segments"] = int(
+                self.store.tier_counters().get("sealed", 0))
+        elif hasattr(self.store, "tier_stats"):
+            log = self.store.tier_stats().get("log")
+            snap["sealed_segments"] = int(log["sealed"]) if log else 0
         if hasattr(self.store, "access_heat"):
             heat = self.store.access_heat(top=self.heat_top)
             snap["hot"] = [tuple(row) for row in heat["read"]]
@@ -145,11 +163,109 @@ class ClusterWatch:
                 "reason": (f"write-behind depth {snap['queue_depth']} > "
                            f"{self.max_queue_depth}"),
             })
+        if snap.get("sealed_segments", 0) >= self.max_sealed_segments:
+            actions.append({
+                "action": "compact",
+                "reason": (f"{snap['sealed_segments']} sealed log "
+                           f"segment(s) awaiting merge into the read tier"),
+            })
+        if (snap.get("replication", 1) < snap.get("replication_target", 1)
+                and not snap["rebalancing"]):
+            actions.append({
+                "action": "re_replicate",
+                "reason": (f"effective replication {snap['replication']} < "
+                           f"target {snap['replication_target']}"),
+            })
         return actions
 
     def step(self) -> List[Dict]:
         """Sample then advise — one watch-loop tick."""
         return self.advise(self.sample())
+
+
+class StorageSupervisor:
+    """Close the watch loop: sample the gauges, *execute* the advice.
+
+    `ClusterWatch` only advises; this supervisor owns acting on it — the
+    runtime-not-operator recovery doctrine applied to the storage tier.
+    Per tick (`step`, or the background thread `start` runs every
+    ``interval`` seconds) it maps advised actions to store verbs:
+
+    * ``flush`` — drain the write-behind queues (queue pressure),
+    * ``compact`` — merge sealed log segments into the read tier (this is
+      what drives ``repro.core.compact`` in the background),
+    * ``re_replicate`` — heal under-replicated segments after a shrink
+      (``replication`` below ``replication_target``),
+    * ``rebalance`` — only when ``allow_rebalance=True``; occupancy moves
+      whole key ranges, so it stays opt-in.
+
+    Topology verbs run with ``wait=False`` and a concurrent admin op just
+    skips the tick (the advice re-fires next tick if still true).
+    ``log`` records every executed action for inspection.
+    """
+
+    def __init__(self, store, watch: Optional[ClusterWatch] = None,
+                 interval: float = 0.25, allow_rebalance: bool = False):
+        self.store = store
+        self.watch = watch or ClusterWatch(store)
+        self.interval = interval
+        self.allow_rebalance = allow_rebalance
+        self.log: List[Dict] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _execute(self, action: Dict) -> bool:
+        from ..cluster.store import RebalanceInFlight  # lazy: keep ft light
+        kind = action["action"]
+        store = self.store
+        try:
+            if kind == "flush" and hasattr(store, "flush"):
+                store.flush()
+            elif kind == "compact" and hasattr(store, "compact"):
+                store.compact()
+            elif kind == "re_replicate" and hasattr(store, "re_replicate"):
+                store.re_replicate(wait=False)
+            elif (kind == "rebalance" and self.allow_rebalance
+                    and hasattr(store, "rebalance")):
+                store.rebalance(wait=False)
+            else:
+                return False
+        except RebalanceInFlight:
+            return False  # an admin op holds the lock; re-advised next tick
+        return True
+
+    def step(self) -> List[Dict]:
+        """One tick: watch, execute, log.  Returns the executed actions."""
+        executed = [a for a in self.watch.step() if self._execute(a)]
+        self.log.extend(executed)
+        return executed
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(self.interval):
+                self.step()
+
+        self._thread = threading.Thread(
+            target=loop, name="ocp-storage-supervisor", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
 
 
 class TrainingSupervisor:

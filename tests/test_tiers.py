@@ -1,0 +1,669 @@
+"""Storage tiers: append-log write path, compacted read path, durability.
+
+The contract under test (paper §4.1's read/write I/O split as
+LSM-for-cuboids):
+
+* `LogBackend` turns write batches into sequential appends and rebuilds
+  its index by replaying segments on open — torn tails (a crash
+  mid-append) are truncated, never served, and replay is idempotent.
+* `DirectoryBackend.put` with fsync on can never publish a torn cuboid
+  and never loses an acked write (crash-point injection at each syscall
+  boundary); orphaned ``.tmp`` files are swept on open and counted.
+* `MemoryBackend` survives concurrent ``keys()`` vs ``put_many``
+  (the rebalance-scan race).
+* A tiered store (log write tier over a compacted read tier) stays
+  bit-identical to a plain single-backend oracle through writes, deletes,
+  flushes, compactions, reopens, crashes at every injected point, and —
+  at cluster scope — across 1/2/4 shards during live compaction,
+  rebalance, and failover-then-heal re-replication.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterStore, VolumeService
+from repro.cluster.api import url_dispatch
+from repro.cluster.cache import enable_write_behind
+from repro.core.compact import Compactor, compact_store
+from repro.core.cutout import cutout, write_cutout
+from repro.core.store import (
+    CuboidStore,
+    DirectoryBackend,
+    MemoryBackend,
+    set_crash_hook,
+)
+from repro.core.wal import HEADER_BYTES, LogBackend, TierPolicy, tiered_store
+from repro.ft import ClusterWatch, StorageSupervisor
+
+from test_rebalance import (
+    CUBOID,
+    N_CELLS,
+    SHAPE,
+    rand_box,
+    random_ops,
+    run_interleaving,
+    spec,
+    volume,
+)
+
+
+class SimulatedCrash(BaseException):
+    """Raised by the crash hook; BaseException so nothing swallows it."""
+
+
+@pytest.fixture
+def crash_at():
+    """Install a hook that raises at one named crash point."""
+    def arm(point, after=0):
+        state = {"n": 0}
+
+        def hook(name):
+            if name == point:
+                state["n"] += 1
+                if state["n"] > after:
+                    raise SimulatedCrash(point)
+
+        set_crash_hook(hook)
+        return state
+
+    yield arm
+    set_crash_hook(None)
+
+
+def log_policy(**kw):
+    kw.setdefault("write_tier", "log")
+    kw.setdefault("fsync", False)  # the fsync *ordering* tests force it on
+    return TierPolicy(**kw)
+
+
+# ------------------------------------------------------- LogBackend unit --
+
+
+def test_log_backend_roundtrip_and_tombstones(tmp_path):
+    log = LogBackend(str(tmp_path), fsync=False)
+    log.put((0, 0, 1), b"aa")
+    log.put_many([((0, 0, 2), b"bb"), ((1, 0, 3), b"cc")])
+    assert log.get((0, 0, 1)) == b"aa"
+    assert log.get_many([(0, 0, 2), (1, 0, 3), (9, 9, 9)]) == [b"bb", b"cc", None]
+    assert (0, 0, 2) in log and (9, 9, 9) not in log
+    log.delete((0, 0, 2))
+    # tombstone: gone from keys(), but probe reports a *definitive* absence
+    assert sorted(log.keys()) == [(0, 0, 1), (1, 0, 3)]
+    assert log.tombstone_keys() == {(0, 0, 2)}
+    assert log.probe((0, 0, 2)) == (True, None)
+    assert log.probe((5, 5, 5)) == (False, None)
+    assert log.probe_many([(0, 0, 1), (0, 0, 2), (5, 5, 5)]) == [
+        (True, b"aa"), (True, None), (False, None)]
+    s = log.stats()
+    assert s["live_keys"] == 2 and s["tombstones"] == 1
+    assert s["appends"] == 4 and s["torn_truncated"] == 0
+
+
+def test_log_backend_rotation_and_seal(tmp_path):
+    log = LogBackend(str(tmp_path), segment_bytes=128, fsync=False)
+    for m in range(6):
+        log.put((0, 0, m), bytes(64))  # every record > half a segment
+    assert log.stats()["segments"] >= 3
+    sealed = log.sealed_segments()
+    assert sealed == sorted(sealed) and len(sealed) >= 2
+    log.seal_active()
+    # everything written is now compactable; a fresh active segment exists
+    assert log.stats()["active_bytes"] == 0
+    for m in range(6):
+        assert log.get((0, 0, m)) == bytes(64)
+
+
+def test_log_backend_reopen_rebuilds_index(tmp_path):
+    log = LogBackend(str(tmp_path), segment_bytes=256, fsync=False)
+    rng = np.random.default_rng(0)
+    want = {}
+    for i in range(40):
+        key = (0, 0, int(rng.integers(0, 10)))
+        if rng.random() < 0.25:
+            log.delete(key)
+            want[key] = None
+        else:
+            blob = bytes(rng.integers(0, 256, size=rng.integers(1, 50),
+                                      dtype=np.uint8))
+            log.put(key, blob)
+            want[key] = blob
+    log.close()
+    # replay is idempotent: reopening twice converges to the same view
+    for _ in range(2):
+        reopened = LogBackend(str(tmp_path), segment_bytes=256, fsync=False)
+        for key, blob in want.items():
+            assert reopened.get(key) == blob
+            assert reopened.probe(key) == (True, blob)  # tombstones survive
+        assert reopened.torn_truncated == 0
+        reopened.close()
+
+
+@pytest.mark.parametrize("cut", ["header", "payload", "crc"])
+def test_log_backend_truncates_torn_tail(tmp_path, cut):
+    log = LogBackend(str(tmp_path), fsync=False)
+    log.put((0, 0, 1), b"x" * 20)
+    log.put((0, 0, 2), b"y" * 20)
+    path = log._segment_path(log._active)
+    size = os.path.getsize(path)
+    log.close()
+    chop = {"header": 20 + HEADER_BYTES - 4, "payload": 8, "crc": 20}[cut]
+    with open(path, "r+b") as f:
+        f.truncate(size - chop)
+    reopened = LogBackend(str(tmp_path), fsync=False)
+    # the whole torn record is gone; the earlier record is intact
+    assert reopened.torn_truncated == 1
+    assert reopened.get((0, 0, 1)) == b"x" * 20
+    assert reopened.probe((0, 0, 2)) == (False, None)
+    # and the tail is clean: appends resume without another truncation
+    reopened.put((0, 0, 3), b"z")
+    reopened.close()
+    again = LogBackend(str(tmp_path), fsync=False)
+    assert again.torn_truncated == 0
+    assert again.get((0, 0, 3)) == b"z"
+
+
+def test_log_backend_rejects_corrupt_crc(tmp_path):
+    log = LogBackend(str(tmp_path), fsync=False)
+    log.put((0, 0, 1), b"a" * 30)
+    path = log._segment_path(log._active)
+    log.close()
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) - 1)
+        f.write(b"\xff")  # flip the last payload byte; header stays valid
+    reopened = LogBackend(str(tmp_path), fsync=False)
+    assert reopened.torn_truncated == 1
+    assert reopened.probe((0, 0, 1)) == (False, None)
+
+
+def test_log_backend_crash_before_sync_is_not_indexed(tmp_path, crash_at):
+    log = LogBackend(str(tmp_path), fsync=False)
+    log.put((0, 0, 1), b"ok")
+    crash_at("wal.append.written")
+    with pytest.raises(SimulatedCrash):
+        log.put((0, 0, 2), b"lost")
+    # the crashed append never reached the index: not acked, not served
+    assert log.probe((0, 0, 2)) == (False, None)
+    assert log.get((0, 0, 1)) == b"ok"
+    set_crash_hook(None)
+    # recovery MAY surface the record (its bytes were complete on disk);
+    # what it must never do is serve a torn one or lose the acked write
+    reopened = LogBackend(str(tmp_path), fsync=False)
+    assert reopened.get((0, 0, 1)) == b"ok"
+    got = reopened.probe((0, 0, 2))
+    assert got in ((False, None), (True, b"lost"))
+
+
+# ------------------------------------------- DirectoryBackend durability --
+
+
+def test_directory_backend_fsync_ordering(tmp_path, monkeypatch):
+    """Data must be durable BEFORE the rename publishes it, and the
+    directory entry after — the exact ordering whose absence was the bug."""
+    calls = []
+    real_fsync, real_replace = os.fsync, os.replace
+    monkeypatch.setattr(os, "fsync", lambda fd: (calls.append("fsync"),
+                                                 real_fsync(fd))[1])
+    monkeypatch.setattr(
+        os, "replace",
+        lambda a, b: (calls.append("replace"), real_replace(a, b))[1])
+    be = DirectoryBackend(str(tmp_path), fsync=True)
+    be.put((0, 0, 0), b"warm")  # pay the one-time mkdir-chain syncs
+    calls.clear()
+    be.put((0, 0, 1), b"blob")
+    assert calls == ["fsync", "replace", "fsync"]
+    # and with fsync off the put must not pay any sync at all
+    calls.clear()
+    DirectoryBackend(str(tmp_path / "nosync"), fsync=False).put(
+        (0, 0, 1), b"blob")
+    assert "fsync" not in calls
+
+
+@pytest.mark.parametrize("point", ["dir.put.written", "dir.put.synced"])
+def test_directory_backend_crash_before_rename(tmp_path, crash_at, point):
+    """A crash before the rename leaves the OLD value published and a tmp
+    orphan — never a torn file under the real name."""
+    be = DirectoryBackend(str(tmp_path), fsync=True)
+    be.put((0, 0, 1), b"old")
+    crash_at(point)
+    with pytest.raises(SimulatedCrash):
+        be.put((0, 0, 1), b"new")
+    set_crash_hook(None)
+    assert be.get((0, 0, 1)) == b"old"
+    # "restart": reopen over the same root — the orphan is swept + counted
+    reopened = DirectoryBackend(str(tmp_path), fsync=True)
+    assert reopened.swept_tmp == 1
+    assert reopened.get((0, 0, 1)) == b"old"
+    assert not [f for f in os.listdir(tmp_path / "0" / "0")
+                if f.endswith(".tmp")]
+
+
+def test_directory_backend_crash_after_rename_keeps_new_value(
+        tmp_path, crash_at):
+    be = DirectoryBackend(str(tmp_path), fsync=True)
+    be.put((0, 0, 1), b"old")
+    crash_at("dir.put.renamed")
+    with pytest.raises(SimulatedCrash):
+        be.put((0, 0, 1), b"new")
+    set_crash_hook(None)
+    # the rename happened and the data beneath it was already synced: the
+    # new value is whole (a pre-fix crash here could surface torn bytes)
+    reopened = DirectoryBackend(str(tmp_path), fsync=True)
+    assert reopened.get((0, 0, 1)) == b"new"
+    assert reopened.swept_tmp == 0
+
+
+def test_tmp_sweep_counts_into_path_stats(tmp_path):
+    root = tmp_path / "data"
+    be = DirectoryBackend(str(root))
+    be.put((0, 0, 1), b"keep")
+    # orphans at several depths, as interrupted puts would leave them
+    (root / "0" / "0" / "00000000000000ff.bin.tmp").write_bytes(b"torn")
+    (root / "0" / "junk.tmp").write_bytes(b"torn")
+    store = CuboidStore(spec(), backend=DirectoryBackend(str(root)))
+    assert store.read_stats.tmp_swept == 2
+    assert store.read_backend.get((0, 0, 1)) == b"keep"
+    assert list(store.read_backend.keys()) == [(0, 0, 1)]
+
+
+def test_fsync_env_default(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_FSYNC", raising=False)
+    assert DirectoryBackend(str(tmp_path / "a")).fsync is False
+    assert LogBackend(str(tmp_path / "b")).fsync is True  # the ack boundary
+    monkeypatch.setenv("REPRO_FSYNC", "1")
+    assert DirectoryBackend(str(tmp_path / "c")).fsync is True
+    monkeypatch.setenv("REPRO_FSYNC", "0")
+    assert LogBackend(str(tmp_path / "d")).fsync is False
+
+
+# ------------------------------------------- MemoryBackend concurrency --
+
+
+def test_memory_backend_keys_vs_put_many_race():
+    """Pre-fix reproducer: keys() iterating the live dict while a flusher
+    lands put_many raised RuntimeError (dict changed size mid-iteration)."""
+    be = MemoryBackend()
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            be.put_many([((0, 0, i + j), b"x") for j in range(16)])
+            i += 16
+
+    def scanner():
+        try:
+            while not stop.is_set():
+                be.keys()
+                be.get_many([(0, 0, 0), (0, 0, 1)])
+                (0, 0, 2) in be
+        except RuntimeError as e:  # pragma: no cover - the pre-fix failure
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(2)]
+    threads += [threading.Thread(target=scanner) for _ in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(0.4)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors
+
+
+# ------------------------------------------------ tiered store oracle --
+
+
+def tiered(root=None, **store_kw):
+    return tiered_store(spec(), root=root, policy=log_policy(), **store_kw)
+
+
+def oracle_and_subject(root=None, **store_kw):
+    return CuboidStore(spec()), tiered(root, **store_kw)
+
+
+def random_walk(ref, sub, seed, n_ops=120, compact_every=25):
+    rng = np.random.default_rng(seed)
+    for i in range(n_ops):
+        m = int(rng.integers(0, N_CELLS))
+        roll = rng.random()
+        if roll < 0.45:
+            data = rng.integers(0, 5, size=CUBOID).astype(np.uint8)
+            if rng.random() < 0.3:
+                data[:] = 0  # lazy-zero delete → log tombstone
+            ref.write_cuboid(0, m, data)
+            sub.write_cuboid(0, m, data)
+        elif roll < 0.85:
+            np.testing.assert_array_equal(
+                sub.read_cuboid(0, m), ref.read_cuboid(0, m))
+        else:
+            lo, hi = rand_box(rng)
+            np.testing.assert_array_equal(
+                cutout(sub, 0, lo, hi), cutout(ref, 0, lo, hi))
+        if i % compact_every == compact_every - 1:
+            sub.compact()
+    sub.flush()
+    assert sub.stored_keys() == ref.stored_keys()
+    np.testing.assert_array_equal(
+        cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_tiered_store_matches_oracle(seed):
+    ref, sub = oracle_and_subject()
+    try:
+        write_cutout(ref, 0, (0, 0, 0), volume(seed))
+        write_cutout(sub, 0, (0, 0, 0), volume(seed))
+        random_walk(ref, sub, seed)
+    finally:
+        sub.close()
+
+
+def test_tiered_store_with_write_behind_matches_oracle():
+    ref, sub = oracle_and_subject()
+    enable_write_behind(sub, max_items=64, batch_items=16)
+    try:
+        random_walk(ref, sub, seed=7)
+    finally:
+        sub.close()
+
+
+def test_acked_writes_survive_reopen(tmp_path):
+    """Everything written before flush() returns must be readable from a
+    brand-new store over the same root — the durability contract."""
+    root = str(tmp_path)
+    ref = CuboidStore(spec())
+    sub = tiered(root)
+    enable_write_behind(sub, max_items=64)
+    write_cutout(ref, 0, (0, 0, 0), volume(3))
+    write_cutout(sub, 0, (0, 0, 0), volume(3))
+    rng = np.random.default_rng(3)
+    for _ in range(30):
+        m = int(rng.integers(0, N_CELLS))
+        data = rng.integers(0, 5, size=CUBOID).astype(np.uint8)
+        if rng.random() < 0.3:
+            data[:] = 0
+        ref.write_cuboid(0, m, data)
+        sub.write_cuboid(0, m, data)
+    sub.compact(max_segments=1)  # partially compacted: both tiers populated
+    sub.flush()
+    sub.close()
+    reborn = tiered(root)
+    assert reborn.stored_keys() == ref.stored_keys()
+    np.testing.assert_array_equal(
+        cutout(reborn, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    reborn.close()
+
+
+def test_migrate_on_log_tier_applies_tombstones():
+    """migrate() on a log write tier must go through compaction: the old
+    per-key loop skipped tombstones, leaving stale read-tier data."""
+    sub = tiered()
+    data = np.ones(CUBOID, dtype=np.uint8)
+    sub.write_cuboid(0, 1, data)
+    sub.compact()  # value now lives on the read tier
+    sub.write_cuboid(0, 1, np.zeros(CUBOID, dtype=np.uint8))  # tombstone
+    sub.migrate()
+    assert not sub.has_cuboid(0, 1)
+    assert (0, 0, 1) not in sub.read_backend  # really deleted, not shadowed
+    assert sub.write_backend.stats()["tombstones"] == 0  # applied, dropped
+    sub.close()
+
+
+def test_background_compactor_converges():
+    sub = tiered()
+    comp = Compactor(sub, interval=0.01, min_sealed=1)
+    ref = CuboidStore(spec())
+    with comp:
+        rng = np.random.default_rng(11)
+        for _ in range(60):
+            m = int(rng.integers(0, N_CELLS))
+            data = rng.integers(0, 5, size=CUBOID).astype(np.uint8)
+            ref.write_cuboid(0, m, data)
+            sub.write_cuboid(0, m, data)
+            sub.write_backend.seal_active()
+            comp.poke()
+        np.testing.assert_array_equal(
+            cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    sub.compact()
+    s = sub.write_backend.stats()
+    assert s["live_keys"] == 0 and s["sealed"] == 0  # fully drained
+    assert sub.stored_keys() == ref.stored_keys()
+    assert sub.compactions["runs"] >= 1
+    sub.close()
+
+
+# ----------------------------------------------------- crash recovery --
+
+
+def test_crash_mid_flush_parks_queue_and_recovers(tmp_path, crash_at):
+    root = str(tmp_path)
+    sub = tiered(root)
+    queue = enable_write_behind(sub, max_items=64, batch_items=8)
+    data = np.full(CUBOID, 7, dtype=np.uint8)
+    sub.write_cuboid(0, 1, data)
+    sub.flush()  # acked: durable before the crash
+    crash_at("wal.append.written")
+    sub.write_cuboid(0, 2, data)
+    with pytest.raises(RuntimeError):  # the park is loud, never silent
+        sub.flush()
+    set_crash_hook(None)
+    assert queue.depth >= 1  # pending writes preserved, not dropped
+    reborn = tiered(root)
+    # the acked write survived; nothing is torn
+    np.testing.assert_array_equal(reborn.read_cuboid(0, 1), data)
+    got = reborn.read_cuboid(0, 2)
+    assert (got == data).all() or not got.any()  # whole or absent
+    reborn.close()
+
+
+def test_crash_mid_compaction_recovers_bit_identical(tmp_path, crash_at):
+    root = str(tmp_path)
+    ref = CuboidStore(spec())
+    sub = tiered(root)
+    write_cutout(ref, 0, (0, 0, 0), volume(5))
+    write_cutout(sub, 0, (0, 0, 0), volume(5))
+    ref.write_cuboid(0, 2, np.zeros(CUBOID, dtype=np.uint8))
+    sub.write_cuboid(0, 2, np.zeros(CUBOID, dtype=np.uint8))
+    crash_at("compact.copied", after=1)  # die on the second batch
+    with pytest.raises(SimulatedCrash):
+        compact_store(sub, batch_keys=16)
+    set_crash_hook(None)
+    # live store already coherent: copied-but-not-dropped entries shadow
+    # the read tier with identical bytes
+    np.testing.assert_array_equal(
+        cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    sub.close()
+    reborn = tiered(root)  # "restart": replay the surviving log suffix
+    np.testing.assert_array_equal(
+        cutout(reborn, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    reborn.compact()  # re-running converges; no torn or resurrected keys
+    assert reborn.stored_keys() == ref.stored_keys()
+    assert reborn.write_backend.stats()["live_keys"] == 0
+    reborn.close()
+
+
+def test_crash_between_drop_and_remove_is_idempotent(tmp_path, crash_at):
+    root = str(tmp_path)
+    sub = tiered(root)
+    data = np.full(CUBOID, 3, dtype=np.uint8)
+    for m in range(8):
+        sub.write_cuboid(0, m, data)
+    crash_at("compact.segment-removed")
+    with pytest.raises(SimulatedCrash):
+        sub.compact()
+    set_crash_hook(None)
+    sub.close()
+    reborn = tiered(root)
+    for m in range(8):
+        np.testing.assert_array_equal(reborn.read_cuboid(0, m), data)
+    reborn.compact()
+    assert reborn.write_backend.stats()["live_keys"] == 0
+    reborn.close()
+
+
+# ------------------------------------------------------- cluster scope --
+
+
+def log_node_factory(i, dataset_spec):
+    return tiered_store(dataset_spec, policy=log_policy())
+
+
+@pytest.mark.parametrize("n_nodes", [1, 2, 4])
+@pytest.mark.parametrize("tier", ["log", "memory"])
+def test_sharded_tiered_matches_reference(n_nodes, tier):
+    """Oracle identity across 1/2/4 shards x tiered/untiered, including
+    migrate (per-node compaction), flush, and rebalance ops."""
+    rng = np.random.default_rng(n_nodes * 5 + (tier == "log"))
+    ops = [("write_cutout", [0, 0, 0], volume(seed=n_nodes))]
+    ops += random_ops(rng, 40)
+    kw = {"node_factory": log_node_factory} if tier == "log" else {}
+    run_interleaving(n_nodes, ops, **kw)
+
+
+@pytest.mark.parametrize("n_nodes", [2, 4])
+def test_reads_bit_identical_during_live_compaction(n_nodes):
+    """A background compactor hammering every shard mid-traffic must be
+    invisible: reads stay bit-identical to the oracle throughout."""
+    ref = CuboidStore(spec())
+    sub = ClusterStore(spec(), n_nodes=n_nodes, node_factory=log_node_factory)
+    stop = threading.Event()
+    errors = []
+
+    def compact_loop():
+        try:
+            while not stop.is_set():
+                for node in sub.nodes:
+                    node.write_backend.seal_active()
+                sub.compact()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=compact_loop)
+    t.start()
+    try:
+        write_cutout(ref, 0, (0, 0, 0), volume(9))
+        write_cutout(sub, 0, (0, 0, 0), volume(9))
+        rng = np.random.default_rng(9)
+        for _ in range(80):
+            m = int(rng.integers(0, N_CELLS))
+            if rng.random() < 0.5:
+                data = rng.integers(0, 5, size=CUBOID).astype(np.uint8)
+                if rng.random() < 0.25:
+                    data[:] = 0
+                ref.write_cuboid(0, m, data)
+                sub.write_cuboid(0, m, data)
+            else:
+                lo, hi = rand_box(rng)
+                np.testing.assert_array_equal(
+                    cutout(sub, 0, lo, hi), cutout(ref, 0, lo, hi))
+        np.testing.assert_array_equal(
+            cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    finally:
+        stop.set()
+        t.join()
+        sub.close()
+    assert not errors
+
+
+def test_cluster_default_factory_honors_write_tier_env(monkeypatch):
+    monkeypatch.setenv("REPRO_WRITE_TIER", "log")
+    monkeypatch.setenv("REPRO_FSYNC", "0")
+    sub = ClusterStore(spec(), n_nodes=2)
+    try:
+        roots = [n._tier_tmpdir.name for n in sub.nodes]
+        assert all(type(n.write_backend).__name__ == "LogBackend"
+                   for n in sub.nodes)
+        data = np.full(CUBOID, 9, dtype=np.uint8)
+        sub.write_cuboid(0, 1, data)
+        np.testing.assert_array_equal(sub.read_cuboid(0, 1), data)
+    finally:
+        sub.close()
+    assert not any(os.path.exists(r) for r in roots)  # scratch reclaimed
+
+
+# -------------------------------------- re-replication: failover + heal --
+
+
+def test_failover_then_heal_coherence_walk():
+    """The under-replication hole: shrink below replication target, then
+    add a rider node — before re_replicate() nothing ever repairs the
+    ring.  After healing, the cluster must survive losing either node."""
+    ref = CuboidStore(spec())
+    sub = ClusterStore(spec(), n_nodes=3, replication=2)
+    vol = volume(13)
+    write_cutout(ref, 0, (0, 0, 0), vol)
+    write_cutout(sub, 0, (0, 0, 0), vol)
+    sub.remove_node(0)
+    sub.remove_node(0)  # 1 node: effective replication collapsed to 1
+    sub.add_node(rebalance=False)  # rider outside the router
+    topo = sub.topology()
+    assert topo["replication"] == 1 and topo["replication_target"] == 2
+    healed = sub.re_replicate()
+    assert healed["healed"] and healed["moved_keys"] > 0
+    topo = sub.topology()
+    assert topo["replication"] == 2
+    np.testing.assert_array_equal(
+        cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    # the heal is real: EITHER node can now fail with zero data loss
+    sub.remove_node(0)
+    np.testing.assert_array_equal(
+        cutout(sub, 0, (0, 0, 0), SHAPE), cutout(ref, 0, (0, 0, 0), SHAPE))
+    # idempotent on a healthy cluster
+    again = sub.re_replicate()
+    assert not again["healed"] and again["moved_keys"] == 0
+    sub.close()
+
+
+def test_supervisor_advises_and_executes_heal_and_compaction():
+    sub = ClusterStore(spec(), n_nodes=2, replication=2,
+                       node_factory=log_node_factory)
+    vol = volume(17)
+    write_cutout(sub, 0, (0, 0, 0), vol)
+    for node in sub.nodes:
+        node.write_backend.seal_active()
+    watch = ClusterWatch(sub, max_sealed_segments=1)
+    advice = {a["action"] for a in watch.step()}
+    assert "compact" in advice
+    sup = StorageSupervisor(sub, watch=watch)
+    executed = {a["action"] for a in sup.step()}
+    assert "compact" in executed
+    assert sub.tier_counters()["sealed"] == 0
+    # now open a replication gap; the supervisor heals it on its tick
+    sub.remove_node(0)
+    sub.add_node(rebalance=False)
+    assert sub.topology()["replication"] < sub.topology()["replication_target"]
+    executed = {a["action"] for a in sup.step()}
+    assert "re_replicate" in executed
+    assert sub.topology()["replication"] == 2
+    np.testing.assert_array_equal(
+        cutout(sub, 0, (0, 0, 0), SHAPE), vol)
+    sub.close()
+
+
+# ------------------------------------------------------- HTTP surface --
+
+
+def test_compact_verb_and_tier_gauges():
+    sub = ClusterStore(spec(), n_nodes=2, node_factory=log_node_factory)
+    service = VolumeService()
+    service.add_dataset("ds", sub)
+    write_cutout(sub, 0, (0, 0, 0), volume(21))
+    stats = url_dispatch(service, "GET", "/ds/stats")
+    assert stats["tiers"]["log_nodes"] == 2
+    assert stats["tiers"]["log_bytes"] > 0
+    resp = url_dispatch(service, "POST", "/ds/compact")
+    assert resp["status"] == 200 and resp["total_keys"] > 0
+    after = url_dispatch(service, "GET", "/ds/stats")["tiers"]
+    assert after["sealed"] == 0
+    assert after["compactions"]["keys"] == resp["total_keys"]
+    # bare /compact sweeps every dataset; wrong-method and unknowns 40x
+    assert url_dispatch(service, "POST", "/compact")["status"] == 200
+    assert url_dispatch(service, "GET", "/ds/compact")["status"] == 405
+    assert url_dispatch(service, "POST", "/nope/compact")["status"] == 404
+    assert url_dispatch(
+        service, "POST", "/ds/compact", {"max_segments": "x"})["status"] == 400
+    sub.close()
