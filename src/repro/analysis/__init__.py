@@ -1,0 +1,8 @@
+"""Correctness tooling: knob registry, lock-order witness, project lints.
+
+This package is deliberately dependency-free (stdlib only) so the lowest
+layers of the tree (`core.store`, `obs.*`) can import it without cycles,
+and `tools/check.py` can run it without numpy/jax installed.
+"""
+
+from . import knobs, lints, witness

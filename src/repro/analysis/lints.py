@@ -1,0 +1,357 @@
+"""Project-specific AST lints (the invariants ruff cannot see).
+
+Rules:
+
+* **L001 fsync discipline** — in any function body that contains a
+  durability sync (``os.fsync`` or the ``_sync_dir`` / ``_sync_root``
+  helpers), no *ack* may lexically precede the first sync: publishing a
+  rename (``os.replace`` / ``os.rename``), binding a key's log location
+  (``self._set_loc(...)`` / ``self._index[...] = ...``).  Paper §4.1's
+  write-path separation only delivers durability if the bytes hit disk
+  before the index or caller can see them.
+* **L002 no submit under a ranked lock** — a thread-pool ``.submit(...)``
+  lexically inside a ``with <ranked lock>:`` block can deadlock when the
+  pool is saturated and the submitted work needs the same lock.
+* **L003 knob registry** — every environment read of a ``REPRO_*`` name
+  must go through `repro.analysis.knobs` (which documents it and renders
+  the README table); direct ``os.environ`` / ``os.getenv`` reads of
+  ``REPRO_*`` constants are flagged.
+* **L004 handler envelope** — every function registered in a module's
+  ``HANDLERS`` table must return the ``{status, error?}`` envelope: an
+  ``_error(...)`` call, a dict literal with a ``"status"`` key, a
+  ``_encode_volume(...)`` body, or a name assigned from one of those.
+* **L005 no swallowed exceptions in storage/migration paths** — a bare
+  ``except:`` anywhere, or (in the storage modules) an
+  ``except Exception/BaseException`` whose body neither re-raises nor
+  references the caught exception, hides corruption instead of
+  surfacing it.
+
+Suppression: append ``# lint: allow(L00X) <reason>`` to the offending
+line.  Suppressions are deliberate and reviewable — the reason is part
+of the pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RULES = ("L001", "L002", "L003", "L004", "L005")
+
+# Attribute/global names created via ordered_lock()/ordered_rlock() —
+# L002's definition of "a ranked lock is statically held".
+RANKED_LOCK_NAMES = frozenset({
+    "_admin_lock", "_move_lock", "_order_lock", "_lock", "_apply_lock",
+    "_stats_lock", "_heat_lock", "_batch_lock", "_DECODE_POOLS_LOCK",
+})
+
+# L005's broad-handler scope: the storage + migration modules.
+STORAGE_PATH_SUFFIXES = (
+    "core/store.py", "core/wal.py", "core/compact.py",
+    "cluster/store.py", "cluster/cache.py",
+)
+
+_SYNC_CALLS = frozenset({"fsync", "_sync_dir", "_sync_root"})
+_ACK_OS_CALLS = frozenset({"replace", "rename"})
+_ENVELOPE_PRODUCERS = frozenset({"_error", "_encode_volume"})
+
+_PRAGMA = re.compile(r"#\s*lint:\s*allow\((L\d{3})\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _pragmas(source: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, ln in enumerate(source.splitlines(), start=1):
+        for m in _PRAGMA.finditer(ln):
+            out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+def _call_name(node: ast.Call) -> str:
+    """Trailing identifier of the called thing ('' when not a name)."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _is_os_call(node: ast.Call, attrs: frozenset) -> bool:
+    fn = node.func
+    return (isinstance(fn, ast.Attribute) and fn.attr in attrs
+            and isinstance(fn.value, ast.Name) and fn.value.id == "os")
+
+
+# --------------------------------------------------------------------------
+# L001 — fsync discipline
+# --------------------------------------------------------------------------
+
+def _l001(tree: ast.AST, path: str) -> List[Finding]:
+    findings = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        syncs, acks = [], []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = _call_name(node)
+                if _is_os_call(node, frozenset({"fsync"})) or name in _SYNC_CALLS:
+                    syncs.append(node.lineno)
+                elif _is_os_call(node, _ACK_OS_CALLS):
+                    acks.append((node.lineno, f"os.{node.func.attr}(...)"))
+                elif name == "_set_loc":
+                    acks.append((node.lineno, "_set_loc(...)"))
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Subscript)
+                            and isinstance(tgt.value, ast.Attribute)
+                            and tgt.value.attr == "_index"):
+                        acks.append((node.lineno, "_index[...] = ..."))
+        if not syncs:
+            continue
+        first_sync = min(syncs)
+        for line, what in acks:
+            if line < first_sync:
+                findings.append(Finding(
+                    "L001", path, line,
+                    f"{what} in {fn.name!r} precedes the first fsync "
+                    f"(line {first_sync}); acks must follow durability"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# L002 — no pool submit under a ranked lock
+# --------------------------------------------------------------------------
+
+def _lock_name(expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Attribute) and expr.attr in RANKED_LOCK_NAMES:
+        return expr.attr
+    if isinstance(expr, ast.Name) and expr.id in RANKED_LOCK_NAMES:
+        return expr.id
+    return None
+
+
+def _l002(tree: ast.AST, path: str) -> List[Finding]:
+    findings = []
+
+    def visit(node: ast.AST, held: Tuple[str, ...]) -> None:
+        if isinstance(node, ast.With):
+            names = [n for item in node.items
+                     if (n := _lock_name(item.context_expr)) is not None]
+            inner = held + tuple(names)
+            for child in node.body:
+                visit(child, inner)
+            return
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "submit" and held):
+            findings.append(Finding(
+                "L002", path, node.lineno,
+                f"pool submit inside `with {held[-1]}:`; release the lock "
+                f"before fanning out"))
+        for child in ast.iter_child_nodes(node):
+            # nested defs start with an empty held stack: the closure body
+            # runs later, not under this with-block... except it *can* run
+            # inline (fan-out jobs), so keep the conservative held stack.
+            visit(child, held)
+
+    visit(tree, ())
+    return findings
+
+
+# --------------------------------------------------------------------------
+# L003 — REPRO_* env reads must go through the knob registry
+# --------------------------------------------------------------------------
+
+def _repro_const(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+            and node.value.startswith("REPRO_"):
+        return node.value
+    return None
+
+
+def _is_environ(expr: ast.expr) -> bool:
+    """Matches ``os.environ`` or a bare ``environ`` name."""
+    if isinstance(expr, ast.Attribute) and expr.attr == "environ":
+        return True
+    return isinstance(expr, ast.Name) and expr.id == "environ"
+
+
+def _l003(tree: ast.AST, path: str) -> List[Finding]:
+    if _norm(path).endswith("analysis/knobs.py"):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        knob = None
+        if isinstance(node, ast.Call):
+            args = [a for a in node.args] + [k.value for k in node.keywords]
+            named = any((k := _repro_const(a)) and (knob := k) for a in args)
+            fn = node.func
+            env_get = (isinstance(fn, ast.Attribute) and fn.attr in ("get", "setdefault", "pop")
+                       and _is_environ(fn.value))
+            getenv = (isinstance(fn, ast.Attribute) and fn.attr == "getenv"
+                      and isinstance(fn.value, ast.Name) and fn.value.id == "os") \
+                or (isinstance(fn, ast.Name) and fn.id == "getenv")
+            if not (named and (env_get or getenv)):
+                continue
+        elif isinstance(node, ast.Subscript) and _is_environ(node.value):
+            knob = _repro_const(node.slice)
+            if knob is None:
+                continue
+        else:
+            continue
+        findings.append(Finding(
+            "L003", path, node.lineno,
+            f"direct environ read of {knob!r}; route it through "
+            f"repro.analysis.knobs so it is registered and documented"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# L004 — handler envelope shape
+# --------------------------------------------------------------------------
+
+def _dict_has_status(node: ast.expr) -> bool:
+    return isinstance(node, ast.Dict) and any(
+        isinstance(k, ast.Constant) and k.value == "status" for k in node.keys)
+
+
+def _l004(tree: ast.AST, path: str) -> List[Finding]:
+    handler_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            tgts = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "HANDLERS" in tgts and isinstance(node.value, ast.Dict):
+                for v in node.value.values:
+                    if isinstance(v, ast.Name):
+                        handler_names.add(v.id)
+    if not handler_names:
+        return []
+
+    findings = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef) or fn.name not in handler_names:
+            continue
+        compliant: Set[str] = set()
+        for node in ast.walk(fn):
+            value, target = None, None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                value, target = node.value, node.targets[0].id
+            elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+                value, target = node.value, node.target.id
+            if target is None or value is None:
+                continue
+            if _dict_has_status(value) or (
+                    isinstance(value, ast.Call)
+                    and _call_name(value) in _ENVELOPE_PRODUCERS):
+                compliant.add(target)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Return) or node.value is None:
+                continue
+            v = node.value
+            ok = (_dict_has_status(v)
+                  or (isinstance(v, ast.Call) and _call_name(v) in _ENVELOPE_PRODUCERS)
+                  or (isinstance(v, ast.Name) and v.id in compliant))
+            if not ok:
+                findings.append(Finding(
+                    "L004", path, node.lineno,
+                    f"handler {fn.name!r} returns a value that is not the "
+                    f"{{status, error?}} envelope"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# L005 — no swallowed exceptions in storage/migration paths
+# --------------------------------------------------------------------------
+
+def _broad_type(node: Optional[ast.expr]) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Tuple):
+        return any(_broad_type(e) for e in node.elts)
+    return isinstance(node, ast.Name) and node.id in ("Exception", "BaseException")
+
+
+def _l005(tree: ast.AST, path: str) -> List[Finding]:
+    in_storage = _norm(path).endswith(STORAGE_PATH_SUFFIXES)
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            findings.append(Finding(
+                "L005", path, node.lineno,
+                "bare `except:` swallows everything including KeyboardInterrupt"))
+            continue
+        if not in_storage or not _broad_type(node.type):
+            continue
+        has_raise = any(isinstance(n, ast.Raise) for body in node.body
+                        for n in ast.walk(body))
+        uses_exc = node.name is not None and any(
+            isinstance(n, ast.Name) and n.id == node.name
+            for body in node.body for n in ast.walk(body))
+        if not has_raise and not uses_exc:
+            findings.append(Finding(
+                "L005", path, node.lineno,
+                "broad except swallows the error in a storage/migration path; "
+                "re-raise it or record it (counter/log)"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+_RULE_FNS = (_l001, _l002, _l003, _l004, _l005)
+
+
+def run_source(source: str, path: str,
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one file's text; `path` scopes the path-sensitive rules."""
+    tree = ast.parse(source, filename=path)
+    allowed = _pragmas(source)
+    findings: List[Finding] = []
+    for fn in _RULE_FNS:
+        rule = fn.__name__.strip("_").upper()
+        if rules is not None and rule not in rules:
+            continue
+        for f in fn(tree, path):
+            if f.rule in allowed.get(f.line, ()):
+                continue
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def run_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every ``*.py`` under the given files/directories."""
+    import pathlib
+
+    files: List[pathlib.Path] = []
+    for p in paths:
+        pth = pathlib.Path(p)
+        if pth.is_dir():
+            files.extend(sorted(pth.rglob("*.py")))
+        else:
+            files.append(pth)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(run_source(f.read_text(), str(f)))
+    return findings

@@ -55,6 +55,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.witness import ordered_lock
 from ..core.store import Key, decompress
 from ..obs import trace
 from ..obs.registry import REGISTRY
@@ -119,7 +120,7 @@ class CuboidCache:
         self.max_bytes = int(max_bytes)
         self.segment_bits = int(segment_bits)
         self._segments: "collections.OrderedDict[SegKey, _Segment]" = collections.OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("cache.segments", 60)
         self.bytes = 0
         self.hits = 0
         self.misses = 0
@@ -416,7 +417,7 @@ class WriteBehindQueue:
         self,
         put_many: Callable[[Sequence[Tuple[Key, bytes]]], None],
         delete: Callable[[Key], None],
-        apply_lock: Optional[threading.Lock] = None,
+        apply_lock=None,  # a Lock-shaped object (ordered or plain)
         max_items: int = 512,
         batch_items: int = 64,
     ):
@@ -424,7 +425,8 @@ class WriteBehindQueue:
             raise ValueError("max_items and batch_items must be positive")
         self._put_many = put_many
         self._delete = delete
-        self._apply_lock = apply_lock or threading.Lock()
+        self._apply_lock = apply_lock if apply_lock is not None \
+            else ordered_lock("wb.apply", 40)
         self.max_items = int(max_items)
         self.batch_items = int(batch_items)
         self._mu = threading.Condition()

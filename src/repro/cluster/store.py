@@ -59,13 +59,14 @@ import concurrent.futures as cf
 import contextlib
 import dataclasses
 import functools
-import os
 import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis import knobs
+from ..analysis.witness import before_submit, ordered_lock, ordered_rlock
 from ..core import morton
 from ..core.cuboid import DatasetSpec
 from ..core.store import BlockSink, CuboidStore, DecodePolicy, Key, MemoryBackend, PathStats
@@ -87,8 +88,7 @@ def _heat_bits() -> int:
     bucketed by ``m >> REPRO_HEAT_BITS`` (default 6 → 64-cuboid buckets),
     keeping the map small on petascale curves while still localizing hot
     regions to a partition-sized neighborhood."""
-    raw = os.environ.get("REPRO_HEAT_BITS", "")
-    return int(raw) if raw else 6
+    return knobs.get_int("REPRO_HEAT_BITS", 6)
 
 
 class RebalanceInFlight(RuntimeError):
@@ -105,7 +105,7 @@ def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
     compacted read tier, in a scratch root the store owns) — the CI
     tier-matrix leg runs the whole suite through the log tier this way.
     """
-    if os.environ.get("REPRO_WRITE_TIER", "") in ("log", "dir"):
+    if knobs.get_raw("REPRO_WRITE_TIER") in ("log", "dir"):
         from ..core.wal import tiered_store
 
         return tiered_store(spec)
@@ -238,11 +238,11 @@ class ClusterStore:
         self.spec = spec
         self._node_factory = node_factory or _default_node_factory
         if cache_bytes is None:
-            cache_bytes = int(os.environ.get("REPRO_CACHE_BYTES", "0") or 0) or None
+            cache_bytes = knobs.get_int("REPRO_CACHE_BYTES", 0) or None
         if write_behind is None:
-            write_behind = os.environ.get("REPRO_WRITE_BEHIND", "0") not in ("", "0")
+            write_behind = knobs.get_flag("REPRO_WRITE_BEHIND", False)
         if replication is None:
-            replication = int(os.environ.get("REPRO_REPLICATION", "1") or 1)
+            replication = knobs.get_int("REPRO_REPLICATION", 1)
         self.replication = max(1, int(replication))
         self._node_cache_bytes = max(1, int(cache_bytes) // n_nodes) if cache_bytes else 0
         self._write_behind = bool(write_behind)
@@ -258,10 +258,10 @@ class ClusterStore:
         self._gate = _OpGate()
         # Serializes whole rebalances; RLock so add/remove can nest into
         # rebalance().
-        self._admin_lock = threading.RLock()
+        self._admin_lock = ordered_rlock("cluster.admin", 10)
         # Serializes the copy phase with double-writes to *moving* keys so
         # a stale copy can never clobber a fresher concurrent write.
-        self._move_lock = threading.Lock()
+        self._move_lock = ordered_lock("cluster.move", 20)
         # {resolution: ((start, stop, old_members, new_members), ...)} —
         # published atomically; empty outside an active migration.  Member
         # indices are positions in `_moves_topo` (the pre-migration
@@ -282,7 +282,7 @@ class ClusterStore:
         # enough to stay always-on — and read by `access_heat()` (the
         # /metrics top-N exposition and the supervisor's ClusterWatch).
         self.heat_bits = _heat_bits()
-        self._heat_lock = threading.Lock()
+        self._heat_lock = ordered_lock("cluster.heat", 75)
         self._read_heat: Dict[Tuple[int, int], int] = {}
         self._write_heat: Dict[Tuple[int, int], int] = {}
         # Request-level pool for batch_cutout's multi-box overlap — lazily
@@ -291,7 +291,10 @@ class ClusterStore:
         # and nesting both levels in one bounded pool deadlocks the moment
         # every worker holds a waiting outer job.
         self._batch_pool: Optional[cf.ThreadPoolExecutor] = None
-        self._batch_lock = threading.Lock()
+        self._batch_lock = ordered_lock("cluster.batch", 76)
+        # repr of the newest secondary error swallowed while rolling back a
+        # failed grow (`_unwiden`); the primary error re-raises past it.
+        self.last_unwiden_error: Optional[str] = None
 
     def _build_node(self, i: int, factory: Optional[NodeFactory] = None) -> CuboidStore:
         node = (factory or self._node_factory)(i, self.spec)
@@ -415,6 +418,10 @@ class ClusterStore:
         pool = self._pool
         if pool is None or len(jobs) <= 1:
             return {n: job() for n, job in jobs.items()}
+        # The copy phase fans out *while holding* the move lock by design
+        # (a stale copy must never clobber a racing double-write); node
+        # jobs never take the move lock, so tell the witness it is safe.
+        before_submit(allow=(self._move_lock,))
         futures = {n: pool.submit(trace.bind(job)) for n, job in jobs.items()}
         return {n: f.result() for n, f in futures.items()}
 
@@ -654,6 +661,7 @@ class ClusterStore:
                     thread_name_prefix="ocp-batch",
                 )
             pool = self._batch_pool
+        before_submit()
         futures = [pool.submit(trace.bind(job)) for job in jobs]
         return [f.result() for f in futures]
 
@@ -1001,8 +1009,10 @@ class ClusterStore:
         for node in dropped:
             try:
                 node.close()
-            except Exception:
-                continue  # the original migration failure is re-raising
+            except Exception as e:
+                # the original migration failure is re-raising through the
+                # caller; record this secondary one instead of losing it
+                self.last_unwiden_error = repr(e)
 
     def _occupancy(self, topo: _Topology) -> Dict[int, List[int]]:
         """{resolution: multiset of occupied cells} — the rebalance signal

@@ -72,8 +72,11 @@ def compact_store(store: CuboidStore, max_segments: Optional[int] = None,
             entries = log.segment_entries(seg)  # Morton-sorted
             for i in range(0, len(entries), batch_keys):
                 batch = entries[i:i + batch_keys]
-                # store._lock serializes us with the flusher's applies and
-                # with migrate() — per-key atomic against every writer
+                # store._lock (rank 40, "store.data") serializes us with
+                # the flusher's applies and with migrate() — per-key
+                # atomic against every writer.  The nested read-tier and
+                # WAL acquisitions below rank higher (50), so the
+                # compactor thread stays inside the witnessed order.
                 with store._lock:
                     drop = []
                     for key, loc in batch:

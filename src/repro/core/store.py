@@ -33,6 +33,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis import knobs
+from ..analysis.witness import before_submit, ordered_lock
 from ..obs import trace
 from .cuboid import DatasetSpec
 
@@ -44,13 +46,6 @@ Key = Tuple[int, int, int]  # (resolution, channel, morton index)
 BlockSink = Callable[[int, Optional[np.ndarray]], None]
 
 _MISS = object()  # sentinel: "not in the prefetch handoff" (None = absent)
-
-
-def _env_flag(name: str, default: bool) -> bool:
-    raw = os.environ.get(name, "")
-    if raw == "":
-        return default
-    return raw.lower() not in ("0", "false", "no", "off")
 
 
 # -- crash injection (tests only) -----------------------------------------
@@ -102,11 +97,9 @@ class DecodePolicy:
 
     @classmethod
     def from_env(cls) -> "DecodePolicy":
-        workers = os.environ.get("REPRO_DECODE_WORKERS", "")
-        prefetch = os.environ.get("REPRO_PREFETCH_SEGMENTS", "")
         return cls(
-            workers=int(workers) if workers else (os.cpu_count() or 1),
-            prefetch_segments=int(prefetch) if prefetch else 1,
+            workers=knobs.get_int("REPRO_DECODE_WORKERS", os.cpu_count() or 1),
+            prefetch_segments=knobs.get_int("REPRO_PREFETCH_SEGMENTS", 1),
         )
 
 
@@ -116,7 +109,7 @@ class DecodePolicy:
 # create, and a ClusterStore's node shards *should* decode into one pool —
 # that is exactly the node-parallel pipeline saturating the cores.
 _DECODE_POOLS: Dict[int, cf.ThreadPoolExecutor] = {}
-_DECODE_POOLS_LOCK = threading.Lock()
+_DECODE_POOLS_LOCK = ordered_lock("store.decode_pools", 80)
 
 
 def _decode_pool(workers: int) -> cf.ThreadPoolExecutor:
@@ -163,6 +156,7 @@ class PathStats:
     decode_s: float = 0.0    # wall time inside decompress (incl. workers)
     prefetch_issued: int = 0    # schedule-lookahead prefetch tasks launched
     prefetch_cuboids: int = 0   # blobs the prefetcher admitted to the cache
+    prefetch_errors: int = 0    # lookahead tasks that failed (never fatal)
     tmp_swept: int = 0          # orphaned .tmp files removed on backend open
 
     def snapshot(self) -> "PathStats":
@@ -226,7 +220,7 @@ class MemoryBackend(Backend):
 
     def __init__(self):
         self._d: Dict[Key, bytes] = {}
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("backend.memory", 50)
 
     def get(self, key):
         with self._lock:
@@ -277,7 +271,7 @@ class DirectoryBackend(Backend):
         self.root = root
         os.makedirs(root, exist_ok=True)
         if fsync is None:
-            fsync = _env_flag("REPRO_FSYNC", default=False)
+            fsync = knobs.get_flag("REPRO_FSYNC", default=False)
         self.fsync = bool(fsync)
         self._synced_dirs: set = set()
         self.swept_tmp = self._sweep_tmp()
@@ -426,14 +420,13 @@ class CuboidStore:
         self.write_backend = write_path_backend
         if compression_level is None:
             # codec level: explicit arg > REPRO_COMPRESS_LEVEL > spec field
-            env = os.environ.get("REPRO_COMPRESS_LEVEL", "")
-            compression_level = int(env) if env else spec.compress_level
+            compression_level = knobs.get_int("REPRO_COMPRESS_LEVEL", spec.compress_level)
         self.compression_level = compression_level
         self.decode_policy = decode_policy or DecodePolicy.from_env()
         self.read_stats = PathStats()
         self.write_stats = PathStats()
         self._np_dtype = np.dtype(spec.dtype)
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("store.data", 40)
         self.read_stats.tmp_swept = getattr(self.read_backend, "swept_tmp", 0)
         if self.write_backend is not None:
             self.write_stats.tmp_swept = getattr(
@@ -447,14 +440,15 @@ class CuboidStore:
         self._tier_tmpdir = None          # owned scratch root (tiered_store)
         self.cache = cache                # duck-typed CuboidCache | None
         self.write_behind = None          # duck-typed WriteBehindQueue | None
+        self.last_prefetch_error: Optional[str] = None  # repr of newest one
         # Serializes same-key write *order* across tiers (queue/backends vs
         # cache) and guards read-absorption against concurrent writes.
-        self._order_lock = threading.Lock()
+        self._order_lock = ordered_lock("store.order", 30)
         self._write_gen = 0
         # Counter updates are batched per call and applied under this lock
         # so the reads == cache_hits + cache_misses invariant survives
         # concurrent clients (bare += would lose updates).
-        self._stats_lock = threading.Lock()
+        self._stats_lock = ordered_lock("store.stats", 70)
 
     @property
     def has_cache(self) -> bool:
@@ -833,7 +827,7 @@ class CuboidStore:
                 run_chunk(lo, hi)
             return
         todo = list(reversed(bounds))  # popped back-first = schedule order
-        todo_lock = threading.Lock()
+        todo_lock = ordered_lock("store.drain", 81)
 
         def drain() -> None:
             while True:
@@ -853,6 +847,7 @@ class CuboidStore:
         # identity when nothing is traced), so a sampled request's decode
         # spans nest under the stage that spawned them.
         pool = _decode_pool(pol.workers)
+        before_submit()
         futures = [pool.submit(trace.bind(drain))
                    for _ in range(min(pol.workers - 1, len(bounds) - 1))]
         # Always join the pool drains before returning — an exception in
@@ -1042,6 +1037,7 @@ class CuboidStore:
         def advance(i: int) -> Optional[Dict[Key, Optional[bytes]]]:
             gen_now = self._read_gen()
             n = 0
+            before_submit()
             for j in range(i + 1, min(i + 1 + depth, len(runs))):
                 if j not in inflight:
                     trace.event("prefetch.issue", run=j)
@@ -1064,7 +1060,8 @@ class CuboidStore:
                 return None  # still queued: fetching beats waiting
             try:
                 res = fut.result()
-            except Exception:
+            except Exception as e:
+                self._note_prefetch_error(e)
                 return None
             if res is None:
                 return None
@@ -1088,9 +1085,12 @@ class CuboidStore:
         view as reads (pending write-behind values first), cache
         admission is generation-guarded under the order lock, and the
         caller re-validates ``gen0`` before consuming the handoff — a
-        stale blob can never mask a fresher write.  Failures are
-        swallowed (returns ``None``); prefetch must never break the
-        foreground read it is trying to speed up.
+        stale blob can never mask a fresher write.  Failures never break
+        the foreground read prefetch is trying to speed up: the task
+        returns ``None``, but the error is *recorded* —
+        ``prefetch_errors`` counts it and ``last_prefetch_error`` keeps
+        the most recent repr for `GET /stats` debugging — rather than
+        silently swallowed (lint L005).
         """
         try:
             cache = self.cache
@@ -1116,8 +1116,15 @@ class CuboidStore:
                             with self._stats_lock:
                                 self.read_stats.prefetch_cuboids += admitted
             return gen0, dict(zip(keys, blobs))
-        except Exception:
+        except Exception as e:
+            self._note_prefetch_error(e)
             return None
+
+    def _note_prefetch_error(self, exc: BaseException) -> None:
+        """Count a failed lookahead task (visible in stats, never fatal)."""
+        with self._stats_lock:
+            self.read_stats.prefetch_errors += 1
+        self.last_prefetch_error = repr(exc)
 
     def store_cuboids(self, r: int, blocks: Dict[int, np.ndarray],
                       channel: int = 0) -> None:

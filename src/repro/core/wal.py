@@ -34,13 +34,14 @@ import threading
 import zlib
 from typing import BinaryIO, Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
+from ..analysis import knobs
+from ..analysis.witness import ordered_rlock
 from .cuboid import DatasetSpec
 from .store import (
     Backend,
     CuboidStore,
     DirectoryBackend,
     Key,
-    _env_flag,
     crashpoint,
 )
 
@@ -105,10 +106,10 @@ class LogBackend(Backend):
         os.makedirs(root, exist_ok=True)
         if fsync is None:
             # the write tier defaults to durable: it is the ack boundary
-            fsync = _env_flag("REPRO_FSYNC", default=True)
+            fsync = knobs.get_flag("REPRO_FSYNC", default=True)
         self.fsync = bool(fsync)
         self.segment_bytes = int(segment_bytes)
-        self._lock = threading.RLock()
+        self._lock = ordered_rlock("wal.log", 50)
         self._index: Dict[Key, _Loc] = {}
         self._seg_refs: Dict[int, int] = {}   # index entries per segment
         self._sizes: Dict[int, int] = {}      # bytes per segment
@@ -426,14 +427,14 @@ class TierPolicy:
 
     @classmethod
     def from_env(cls) -> "TierPolicy":
-        return cls(write_tier=os.environ.get("REPRO_WRITE_TIER", "") or "dir")
+        return cls(write_tier=knobs.get_str("REPRO_WRITE_TIER", "dir"))
 
     def build(self, root: str) -> Tuple[Backend, Optional[Backend]]:
         """Materialize ``(read_backend, write_backend | None)`` under
         ``root`` (``read/`` and ``wal/`` or ``write/`` subtrees)."""
         read = DirectoryBackend(os.path.join(root, "read"), fsync=False)
         fsync = (self.fsync if self.fsync is not None
-                 else _env_flag("REPRO_FSYNC", default=True))
+                 else knobs.get_flag("REPRO_FSYNC", default=True))
         if self.write_tier == "log":
             return read, LogBackend(
                 os.path.join(root, "wal"),

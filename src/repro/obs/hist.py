@@ -23,6 +23,8 @@ import time
 from bisect import bisect_left
 from typing import Dict, Iterable, List, Optional, Sequence
 
+from ..analysis.witness import ordered_lock
+
 __all__ = ["BOUNDS", "Histogram"]
 
 # Upper bucket bounds in seconds: 1µs, 2µs, 4µs, ... ~67s (27 buckets),
@@ -39,7 +41,7 @@ class Histogram:
         self.counts = [0] * (len(BOUNDS) + 1)  # last slot = +Inf overflow
         self.count = 0
         self.sum = 0.0
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("obs.hist", 92)
 
     # -- recording ----------------------------------------------------------
     def observe(self, seconds: float) -> None:

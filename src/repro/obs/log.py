@@ -19,18 +19,20 @@ from __future__ import annotations
 
 import json
 import logging
-import os
 import sys
 import threading
 import time
 from typing import Any, Dict, Optional
+
+from ..analysis import knobs
+from ..analysis.witness import ordered_lock
 
 __all__ = ["LOGGER", "access_enabled", "slow_threshold_s", "access_log", "slow_request", "emit"]
 
 LOGGER = logging.getLogger("repro.obs")
 LOGGER.setLevel(logging.INFO)
 
-_handler_lock = threading.Lock()
+_handler_lock = ordered_lock("obs.log", 93)
 
 
 def _ensure_handler() -> None:
@@ -48,15 +50,14 @@ def _ensure_handler() -> None:
 
 
 def access_enabled() -> bool:
-    return os.environ.get("REPRO_ACCESS_LOG", "") == "1"
+    return knobs.get_flag("REPRO_ACCESS_LOG", False)
 
 
 def slow_threshold_s() -> Optional[float]:
     """``REPRO_SLOW_MS`` as seconds, or ``None`` when unset/disabled."""
-    raw = os.environ.get("REPRO_SLOW_MS", "")
-    if not raw:
+    ms = knobs.get_float("REPRO_SLOW_MS", None)
+    if ms is None:
         return None
-    ms = float(raw)
     return ms / 1000.0 if ms >= 0 else None
 
 

@@ -19,6 +19,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from ..analysis.witness import ordered_lock
 from .hist import Histogram
 
 __all__ = ["Labels", "Sample", "Metric", "Registry", "REGISTRY", "render_labels"]
@@ -60,7 +61,7 @@ class Registry:
     """Histogram families + scrape-time collectors, rendered as text."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("obs.registry", 91)
         # {name: (help, {labels: Histogram})}
         self._hists: Dict[str, Tuple[str, Dict[Labels, Histogram]]] = {}
         self._collectors: List[Callable[[], Iterable[Metric]]] = []

@@ -31,11 +31,13 @@ from __future__ import annotations
 
 import contextvars
 import itertools
-import os
 import threading
 import time
 import uuid
 from typing import Any, Callable, Dict, List, Optional
+
+from ..analysis import knobs
+from ..analysis.witness import ordered_lock
 
 __all__ = [
     "SpanRing",
@@ -68,7 +70,7 @@ class SpanRing:
         self.capacity = int(capacity)
         self._buf: List[Optional[Dict[str, Any]]] = [None] * self.capacity
         self._idx = 0
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("obs.ring", 90)
         self.appended = 0  # lifetime spans recorded (monotonic)
         self.dropped = 0  # spans overwritten before ever being read
 
@@ -103,8 +105,7 @@ class SpanRing:
 
 
 def _ring_capacity() -> int:
-    raw = os.environ.get("REPRO_TRACE_RING", "")
-    return int(raw) if raw else 4096
+    return knobs.get_int("REPRO_TRACE_RING", 4096)
 
 
 #: The per-node ring every instrumented stage writes into and the
@@ -148,10 +149,9 @@ def current() -> Optional[TraceContext]:
 def sample_period() -> int:
     """``REPRO_TRACE_SAMPLE`` as a sampling period: 0 = never, 1 = every
     request, k = one request in k (from a fractional rate)."""
-    raw = os.environ.get("REPRO_TRACE_SAMPLE", "")
-    if not raw:
+    rate = knobs.get_float("REPRO_TRACE_SAMPLE", None)
+    if rate is None:
         return 0
-    rate = float(raw)
     if rate <= 0:
         return 0
     if rate >= 1:

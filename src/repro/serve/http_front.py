@@ -43,6 +43,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.witness import ordered_lock
 from ..cluster.api import ApiError, parse_url
 from ..cluster.handlers import HANDLERS, Request, Response, VolumeService, _error, get_cutout
 from ..obs import log as obs_log
@@ -114,7 +115,7 @@ class _CutoutCoalescer:
     def __init__(self, service: VolumeService, max_batch: int = 16):
         self._service = service
         self.max_batch = max_batch
-        self._lock = threading.Lock()
+        self._lock = ordered_lock("frontdoor.coalesce", 65)
         self._queues: Dict[str, collections.deque] = {}
         self._busy: set = set()
         self.batches = 0  # drain rounds executed

@@ -1,0 +1,64 @@
+"""Suite-wide correctness instrumentation.
+
+* The lock-order witness is ON for the whole tier-1 suite (unless the
+  environment explicitly disables it), so every coherence / rebalance /
+  compaction stress test doubles as a deadlock-order test: any rank
+  inversion, acquisition-graph cycle, or submit-under-lock observed
+  anywhere in the run fails the test that triggered it, with stacks.
+* A session-teardown deflake guard asserts that no non-daemon thread and
+  no ranked lock outlives the suite (a leaked Compactor / Supervisor /
+  flusher thread turns into cross-test flakes otherwise).
+
+The env knob must be set before any ``repro`` module is imported —
+conftest import time is the one hook that reliably precedes them.
+"""
+
+import os
+
+os.environ.setdefault("REPRO_LOCK_WITNESS", "1")
+
+import threading  # noqa: E402
+
+import pytest  # noqa: E402
+
+from repro.analysis import witness  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def lock_witness_guard():
+    """Fail the current test on any lock-discipline violation it caused."""
+    witness.GLOBAL.take_violations()  # drop anything left by collection
+    yield
+    violations = witness.GLOBAL.take_violations()
+    if violations:
+        pytest.fail(
+            "lock-order witness recorded %d violation(s):\n\n%s"
+            % (len(violations), "\n\n".join(v.format() for v in violations)),
+            pytrace=False,
+        )
+
+
+# ThreadPoolExecutor workers are non-daemon but park idle on their work
+# queue and are joined by the interpreter at exit; pools from stores the
+# tests never close are not the flake source this guard hunts (leaked
+# component threads — compactor / supervisor / flusher — are).
+_POOL_PREFIXES = ("ocp-node", "ocp-batch", "ocp-decode", "ThreadPoolExecutor")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def deflake_guard():
+    """No non-daemon threads and no ranked locks held at session end."""
+    main = threading.main_thread()
+    yield
+    leaked = [t for t in threading.enumerate()
+              if t is not main and t.is_alive() and not t.daemon
+              and not t.name.startswith(_POOL_PREFIXES)]
+    for t in leaked:
+        t.join(timeout=2.0)
+    leaked = [t for t in leaked if t.is_alive()]
+    assert not leaked, (
+        "non-daemon thread(s) leaked past session teardown: "
+        + ", ".join(repr(t) for t in leaked))
+
+    held = witness.GLOBAL.held_snapshot()
+    assert not held, f"ranked locks still held at session teardown: {held}"

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Project lint driver: AST lint suite (L001-L005) + README knob table.
+
+Usage:
+
+    python tools/check.py [paths ...]      # default: src/
+    python tools/check.py --report out.json
+    python tools/check.py --fix-readme     # rewrite README's knob table
+
+Exits non-zero on any finding (CI fails the build on that).  The
+``--report`` JSON is uploaded as a CI artifact so a red build carries
+the full finding list without re-running locally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import knobs, lints  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (default: src/)")
+    ap.add_argument("--report", metavar="FILE", help="write findings as JSON")
+    ap.add_argument("--readme", default=str(REPO / "README.md"),
+                    help="README to check the knob table in ('' to skip)")
+    ap.add_argument("--fix-readme", action="store_true",
+                    help="rewrite the README knob table from the registry")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or [str(REPO / "src")]
+    findings = lints.run_paths(paths)
+
+    table_findings = []
+    if args.readme:
+        readme = pathlib.Path(args.readme)
+        text = readme.read_text()
+        try:
+            stale = knobs.readme_stale(text)
+        except ValueError as e:
+            stale, note = True, str(e)
+        else:
+            note = "knob table out of date; run `python tools/check.py --fix-readme`"
+        if stale and args.fix_readme:
+            readme.write_text(knobs.splice_readme(text))
+            print(f"rewrote knob table in {readme}")
+        elif stale:
+            table_findings.append(
+                {"rule": "K001", "path": str(readme), "line": 0, "message": note})
+
+    rows = [f.__dict__ for f in findings] + table_findings
+    if args.report:
+        pathlib.Path(args.report).write_text(json.dumps(rows, indent=2) + "\n")
+
+    for f in findings:
+        print(f.format())
+    for t in table_findings:
+        print(f"{t['path']}:0: K001 {t['message']}")
+
+    if rows:
+        print(f"\n{len(rows)} finding(s)")
+        return 1
+    print(f"check clean: {len(paths)} path(s), "
+          f"{len(knobs.REGISTRY)} registered knobs")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
