@@ -1,0 +1,140 @@
+"""Fault-tolerance benchmarks (ISSUE 10: the always-on service story).
+
+One story, three phases: p99 cutout-read latency and client-visible error
+rate on a 3-node replication-2 cluster — **healthy**, **during a node
+kill** (a live owner crashed mid-traffic, reads failing over on the
+degraded path while the supervisor detects and promotes), and **after
+automatic failover** (topology shrunk, replication healed back to target
+with no operator call).  A ``heal`` row reports the closed-loop recovery
+time from kill to healed replication.
+
+Every sampled cutout is verified bit-identical against the ingested
+volume — a fast wrong answer is not a data point.
+
+``BENCH_PRESET=tiny`` shrinks volumes for the CI smoke job.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.cluster import ClusterStore
+from repro.core.cuboid import DatasetSpec
+from repro.core.cutout import cutout, ingest
+from repro.ft import ClusterWatch, FaultPlan, StorageSupervisor, faulty_factory
+
+
+def preset() -> str:
+    return os.environ.get("BENCH_PRESET", "full")
+
+
+def _shape():
+    return (64, 64, 64) if preset() == "tiny" else (128, 128, 128)
+
+
+def _spec(shape):
+    return DatasetSpec(name="faults_bench", volume_shape=shape,
+                       dtype="uint8", base_cuboid=(32, 32, 16))
+
+
+def _boxes(shape, n, seed=23):
+    rng = np.random.default_rng(seed)
+    size = tuple(max(8, s // 4) for s in shape)
+    out = []
+    for _ in range(n):
+        lo = tuple(int(rng.integers(0, s - sz)) for s, sz in zip(shape, size))
+        out.append((lo, tuple(l + sz for l, sz in zip(lo, size))))
+    return out
+
+
+def _p99(samples: List[float]) -> float:
+    return float(np.percentile(samples, 99)) if samples else 0.0
+
+
+def _sample(cluster, vol, boxes, n, seed) -> Tuple[List[float], int]:
+    """n verified cutout reads: (latencies of the successes, error count)."""
+    rng = np.random.default_rng(seed)
+    lats: List[float] = []
+    errors = 0
+    for _ in range(n):
+        lo, hi = boxes[int(rng.integers(0, len(boxes)))]
+        t0 = time.perf_counter()
+        try:
+            got = cutout(cluster, 0, lo, hi)
+        except Exception:
+            errors += 1
+            continue
+        lats.append(time.perf_counter() - t0)
+        sl = tuple(slice(a, b) for a, b in zip(lo, hi))
+        if not np.array_equal(got, vol[sl]):
+            raise AssertionError(f"stale read at {lo}..{hi}")
+    return lats, errors
+
+
+def kill_and_heal() -> List[Dict]:
+    shape = _shape()
+    n = 20 if preset() == "tiny" else 60
+    vol = np.random.default_rng(11).integers(0, 255, size=shape,
+                                             dtype=np.uint8)
+    plans = {i: FaultPlan(seed=i) for i in range(3)}
+    fac = faulty_factory(plans=plans)
+    cluster = ClusterStore(_spec(shape), n_nodes=3, replication=2,
+                           node_factory=fac)
+    ingest(cluster, 0, vol)
+    boxes = _boxes(shape, n=6)
+
+    # phase 1: healthy baseline
+    lats_healthy, errs_healthy = _sample(cluster, vol, boxes, n, seed=3)
+
+    # phase 2: kill a live owner; reads fail over on the degraded path
+    # while the supervisor detects, declares dead, and promotes replicas
+    sup = StorageSupervisor(cluster, watch=ClusterWatch(cluster, dead_ticks=2),
+                            interval=0.02)
+    fac.built[1].crash()
+    t_kill = time.perf_counter()
+    sup.start()
+    lats_kill, errs_kill = _sample(cluster, vol, boxes, n, seed=5)
+    # wait for the closed loop: topology shrunk AND replication healed
+    deadline = time.monotonic() + 120.0
+    healed = False
+    while time.monotonic() < deadline:
+        topo = cluster.topology()
+        if (topo["n_nodes"] == 2 and not topo["rebalancing"]
+                and topo.get("replication") == topo.get("replication_target")):
+            healed = True
+            break
+        time.sleep(0.02)
+    t_heal = time.perf_counter() - t_kill
+    sup.stop()
+
+    # phase 3: after automatic failover
+    lats_after, errs_after = _sample(cluster, vol, boxes, n, seed=7)
+    cluster.close()
+
+    def rate(errs, total):
+        return errs / max(1, total)
+
+    return [
+        {"name": f"faults/read_healthy_p99/{shape[0]}",
+         "us_per_call": _p99(lats_healthy) * 1e6,
+         "derived": f"{len(lats_healthy)}samples"
+                    f";err_rate={rate(errs_healthy, n):.3f}"},
+        {"name": f"faults/read_during_kill_p99/{shape[0]}",
+         "us_per_call": _p99(lats_kill) * 1e6,
+         "derived": f"{len(lats_kill)}samples"
+                    f";err_rate={rate(errs_kill, n):.3f}"},
+        {"name": f"faults/read_after_failover_p99/{shape[0]}",
+         "us_per_call": _p99(lats_after) * 1e6,
+         "derived": f"{len(lats_after)}samples"
+                    f";err_rate={rate(errs_after, n):.3f}"},
+        {"name": f"faults/failover_heal/{shape[0]}",
+         "us_per_call": t_heal * 1e6,
+         "derived": f"healed={healed};kill_to_replication_target"},
+    ]
+
+
+def rows() -> List[Dict]:
+    return kill_and_heal()

@@ -53,8 +53,8 @@ def main(argv=None) -> None:
     if args.preset:
         os.environ["BENCH_PRESET"] = args.preset
 
-    from . import (cache_bench, cluster_bench, coldread_bench, figs,
-                   frontdoor_bench, kernels_bench, obs_bench,
+    from . import (cache_bench, cluster_bench, coldread_bench, faults_bench,
+                   figs, frontdoor_bench, kernels_bench, obs_bench,
                    rebalance_bench, tier_bench)
 
     sections = [
@@ -66,6 +66,7 @@ def main(argv=None) -> None:
         ("cache", cache_bench.rows),
         ("coldread", coldread_bench.rows),
         ("rebalance", rebalance_bench.rows),
+        ("faults", faults_bench.rows),
         ("tier", tier_bench.rows),
         ("frontdoor", frontdoor_bench.rows),
         ("obs", obs_bench.rows),

@@ -45,6 +45,7 @@ RULES = ("L001", "L002", "L003", "L004", "L005")
 RANKED_LOCK_NAMES = frozenset({
     "_admin_lock", "_move_lock", "_order_lock", "_lock", "_apply_lock",
     "_stats_lock", "_heat_lock", "_batch_lock", "_DECODE_POOLS_LOCK",
+    "_health_lock", "_repair_lock",
 })
 
 # L005's broad-handler scope: the storage + migration modules.

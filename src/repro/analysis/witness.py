@@ -32,6 +32,8 @@ rank  name                    lock
 ====  ======================  ==================================
  10   cluster.admin           ``ClusterStore._admin_lock``
  20   cluster.move            ``ClusterStore._move_lock``
+ 22   cluster.health          ``ClusterStore._health_lock``
+ 24   cluster.repair          ``ClusterStore._repair_lock``
  30   store.order             ``CuboidStore._order_lock``
  40   store.data              ``CuboidStore._lock`` (also the
                               write-behind apply lock)

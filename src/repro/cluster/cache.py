@@ -55,6 +55,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis import knobs
 from ..analysis.witness import ordered_lock
 from ..core.store import Key, decompress
 from ..obs import trace
@@ -408,9 +409,13 @@ class WriteBehindQueue:
     pending (bursts are absorbed up to the bound, then writers throttle to
     the flusher's pace — the paper's SSD saturating behaviour).
 
-    A flusher exception parks the queue in an error state: the pending map
-    is preserved and the error re-raises from ``flush()``/``close()``/
-    ``enqueue`` so lost writes are loud, never silent.
+    A flush failure never stops the queue: the failed batch is retried
+    per-key with capped exponential backoff while fresh writes keep
+    flowing.  A key that keeps failing past ``REPRO_WB_POISON_AFTER``
+    attempts is quarantined into a poison list (surfaced via
+    ``poison_keys()`` / ``counters()`` / ``PathStats``) so one broken key
+    can never wedge the barrier for everyone else; re-enqueueing a
+    poisoned key gives it a fresh chance.
     """
 
     def __init__(
@@ -420,6 +425,8 @@ class WriteBehindQueue:
         apply_lock=None,  # a Lock-shaped object (ordered or plain)
         max_items: int = 512,
         batch_items: int = 64,
+        retry_backoff: float = 0.01,
+        retry_cap: float = 0.25,
     ):
         if max_items <= 0 or batch_items <= 0:
             raise ValueError("max_items and batch_items must be positive")
@@ -429,37 +436,43 @@ class WriteBehindQueue:
             else ordered_lock("wb.apply", 40)
         self.max_items = int(max_items)
         self.batch_items = int(batch_items)
+        self.retry_backoff = float(retry_backoff)
+        self.retry_cap = float(retry_cap)
+        self.poison_after = max(1, knobs.get_int("REPRO_WB_POISON_AFTER", 8))
         self._mu = threading.Condition()
         self._pending: Dict[Key, Tuple[int, Optional[bytes]]] = {}
         self._order: Deque[Key] = collections.deque()
+        self._fail_counts: Dict[Key, int] = {}
+        self._poison: Dict[Key, str] = {}
         self._seq = 0
         self._closed = False
-        self._error: Optional[BaseException] = None
         self.enqueued = 0
         self.applied = 0
         self.batches = 0
         self.depth_peak = 0
+        self.flush_errors = 0
+        self.retried = 0
+        self.poisoned = 0
+        self.last_flush_error: Optional[str] = None
         self._thread = threading.Thread(target=self._run, name="ocp-write-behind", daemon=True)
         self._thread.start()
 
     # -- producer side -----------------------------------------------------
-    def _check_error_locked(self) -> None:
-        if self._error is not None:
-            raise RuntimeError("write-behind flusher failed") from self._error
-
     def enqueue(self, key: Key, blob: Optional[bytes]) -> None:
         with self._mu:
-            self._check_error_locked()
             if self._closed:
                 raise RuntimeError("write-behind queue is closed")
             # Backpressure on *distinct* keys: rewriting a pending key never
             # blocks (it replaces in place).
             while len(self._pending) >= self.max_items and key not in self._pending:
-                self._check_error_locked()
                 self._mu.notify_all()
                 self._mu.wait(0.05)
                 if self._closed:  # closed while we waited for room
                     raise RuntimeError("write-behind queue is closed")
+            # A rewrite of a quarantined key is a fresh chance: the new
+            # value may well apply (the poison may have been transient).
+            self._poison.pop(key, None)
+            self._fail_counts.pop(key, None)
             self._seq += 1
             self._pending[key] = (self._seq, blob)
             self._order.append(key)
@@ -501,7 +514,46 @@ class WriteBehindQueue:
         return puts, dels
 
     # -- flusher -----------------------------------------------------------
+    def _apply(self, items: List[Tuple[Key, int, Optional[bytes]]]) -> bool:
+        """Apply one batch under the apply lock.  Returns False on failure
+        (recorded for the poison machinery) instead of raising — the
+        flusher retries; only a ``BaseException`` (interpreter teardown)
+        still kills the thread, and ``flush()``'s liveness check turns
+        that into a loud error."""
+        try:
+            t0 = time.perf_counter()
+            with self._apply_lock:
+                puts = [(k, b) for k, _, b in items if b is not None]
+                if puts:
+                    self._put_many(puts)
+                for k, _, b in items:
+                    if b is None:
+                        self._delete(k)
+            # The flusher runs outside any request's trace, so its
+            # visibility is a histogram, not spans: batch apply
+            # latency by size is what diagnoses a saturated queue.
+            REGISTRY.histogram(
+                "repro_flush_batch_seconds",
+                None,
+                "write-behind flusher batch apply duration",
+            ).observe(time.perf_counter() - t0)
+            return True
+        except Exception as e:
+            with self._mu:
+                self.flush_errors += 1
+                self.last_flush_error = repr(e)
+            return False
+
+    def _ack_locked(self, items: List[Tuple[Key, int, Optional[bytes]]]) -> None:
+        for key, seq, _ in items:
+            ent = self._pending.get(key)
+            if ent is not None and ent[0] == seq:
+                del self._pending[key]
+        self.applied += len(items)
+        self.batches += 1
+
     def _run(self) -> None:
+        backoff = self.retry_backoff
         while True:
             with self._mu:
                 while not self._order and not self._closed:
@@ -521,36 +573,51 @@ class WriteBehindQueue:
                     batch.append((key, ent[0], ent[1]))
             if not batch:
                 continue
-            try:
-                t0 = time.perf_counter()
-                with self._apply_lock:
-                    puts = [(k, b) for k, _, b in batch if b is not None]
-                    if puts:
-                        self._put_many(puts)
-                    for k, _, b in batch:
-                        if b is None:
-                            self._delete(k)
-                # The flusher runs outside any request's trace, so its
-                # visibility is a histogram, not spans: batch apply
-                # latency by size is what diagnoses a saturated queue.
-                REGISTRY.histogram(
-                    "repro_flush_batch_seconds",
-                    None,
-                    "write-behind flusher batch apply duration",
-                ).observe(time.perf_counter() - t0)
-            except BaseException as e:  # park: preserve pending, re-raise later
+            if self._apply(batch):
+                backoff = self.retry_backoff
                 with self._mu:
-                    self._error = e
+                    self._ack_locked(batch)
                     self._mu.notify_all()
-                return
-            with self._mu:
-                for key, seq, _ in batch:
+                continue
+            # The batch failed as a unit.  Retry each entry individually so
+            # one bad key can't hold the rest of the batch hostage; a key
+            # that keeps failing past the threshold is quarantined.
+            acked: List[Tuple[Key, int, Optional[bytes]]] = []
+            for key, seq, blob in batch:
+                with self._mu:
                     ent = self._pending.get(key)
-                    if ent is not None and ent[0] == seq:
-                        del self._pending[key]
-                self.applied += len(batch)
-                self.batches += 1
-                self._mu.notify_all()
+                    if ent is None or ent[0] != seq:
+                        continue  # superseded: the newer write has its own order entry
+                if self._apply([(key, seq, blob)]):
+                    acked.append((key, seq, blob))
+                    with self._mu:
+                        self.retried += 1
+                        self._fail_counts.pop(key, None)
+                    continue
+                with self._mu:
+                    n = self._fail_counts.get(key, 0) + 1
+                    self._fail_counts[key] = n
+                    if n >= self.poison_after:
+                        ent = self._pending.get(key)
+                        if ent is not None and ent[0] == seq:
+                            del self._pending[key]
+                        self._poison[key] = self.last_flush_error or "flush failed"
+                        self._fail_counts.pop(key, None)
+                        self.poisoned += 1
+                        self._mu.notify_all()  # quarantine unblocks flush()
+                    else:
+                        self._order.append(key)  # requeue for the next pass
+            with self._mu:
+                if acked:
+                    self._ack_locked(acked)
+                    self._mu.notify_all()
+                    backoff = self.retry_backoff
+                else:
+                    # Every entry in the pass failed: back off (capped
+                    # exponential; a close() notify wakes the wait early).
+                    if not self._closed:
+                        self._mu.wait(backoff)
+                    backoff = min(backoff * 2, self.retry_cap)
 
     # -- barriers ----------------------------------------------------------
     def flush(self, timeout: Optional[float] = None) -> int:
@@ -559,8 +626,10 @@ class WriteBehindQueue:
 
         The barrier is a sequence snapshot, not queue emptiness, so it
         stays live under sustained concurrent writers: writes enqueued
-        after the flush began do not extend the wait.  Returns the number
-        of writes that were pending at call time.
+        after the flush began do not extend the wait.  A write whose key
+        is quarantined as poison counts as settled (it will never apply;
+        the quarantine is surfaced via ``poison_keys()``/``counters()``).
+        Returns the number of writes that were pending at call time.
         """
         with self._mu:
             target = self._seq
@@ -568,29 +637,30 @@ class WriteBehindQueue:
             self._mu.notify_all()
             waited = 0.0
             while any(seq <= target for seq, _ in self._pending.values()):
-                self._check_error_locked()
-                if not self._thread.is_alive() and self._error is None:
+                if not self._thread.is_alive():
                     raise RuntimeError("write-behind flusher died")
                 self._mu.wait(0.05)
                 waited += 0.05
                 if timeout is not None and waited >= timeout:
                     raise TimeoutError(f"flush timed out with {len(self._pending)} pending")
-            self._check_error_locked()
         return drained
 
     def close(self) -> None:
         """Flush, then stop the flusher thread.  Idempotent."""
         with self._mu:
             if self._closed and not self._thread.is_alive():
-                self._check_error_locked()
                 return
             self._closed = True
             self._mu.notify_all()
         self._thread.join(timeout=30.0)
         with self._mu:
-            self._check_error_locked()
             if self._pending:
                 raise RuntimeError(f"write-behind queue closed with {len(self._pending)} pending")
+
+    def poison_keys(self) -> Dict[Key, str]:
+        """Snapshot of quarantined keys -> the error that poisoned them."""
+        with self._mu:
+            return dict(self._poison)
 
     def counters(self) -> Dict[str, int]:
         return {
@@ -599,6 +669,9 @@ class WriteBehindQueue:
             "batches": self.batches,
             "depth": len(self._pending),
             "depth_peak": self.depth_peak,
+            "flush_errors": self.flush_errors,
+            "retried": self.retried,
+            "poisoned": self.poisoned,
         }
 
 

@@ -233,6 +233,22 @@ def _collect_store_metrics(service: VolumeService, targets: List[str]) -> List[M
                     {"dataset": n, "node": i},
                     keys,
                 )
+        if hasattr(store, "node_health"):
+            for h in store.node_health():
+                add(
+                    "repro_node_health",
+                    "gauge",
+                    "per-node health state (1 = the labelled state is current)",
+                    {"dataset": n, "node": h["node"], "state": h["state"]},
+                    1,
+                )
+                add(
+                    "repro_node_repair_pending",
+                    "gauge",
+                    "write repairs queued for the node (anti-entropy backlog)",
+                    {"dataset": n, "node": h["node"]},
+                    h["repair_pending"],
+                )
         if hasattr(store, "access_heat"):
             heat = store.access_heat(top=_HEAT_TOP)
             add(
@@ -490,6 +506,10 @@ def get_stats(service: VolumeService, request: Request) -> Response:
         }
     if hasattr(store, "access_heat"):
         body["heat"] = store.access_heat(top=_HEAT_TOP)
+    if hasattr(store, "node_health"):
+        # The health machine's live view: per-node state, consecutive
+        # error count, and anti-entropy repair backlog.
+        body["health"] = store.node_health()
     # Storage-tier gauges: cluster aggregate when available, else the
     # single store's own tier report (log segment/index sizes, lifetime
     # compaction totals) — the signal the supervisor's compaction trigger

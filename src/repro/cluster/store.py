@@ -61,7 +61,7 @@ import dataclasses
 import functools
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,6 +72,7 @@ from ..core.cuboid import DatasetSpec
 from ..core.store import BlockSink, CuboidStore, DecodePolicy, Key, MemoryBackend, PathStats
 from ..obs import trace
 from ..obs.registry import REGISTRY
+from . import deadline
 from .cache import attach_cache, enable_write_behind
 from .router import Partition, Router
 
@@ -95,6 +96,54 @@ class RebalanceInFlight(RuntimeError):
     """A topology change (rebalance / add_node / remove_node) is already
     in progress.  Raised by ``rebalance(wait=False)`` and friends instead
     of queueing behind the admin lock; the HTTP layer maps it to 409."""
+
+
+class NoLiveReplica(RuntimeError):
+    """Every member of a replica set is excluded (failed this request or
+    declared dead) — the read cannot be served from any surviving copy."""
+
+
+class WriteQuorumError(RuntimeError):
+    """A replicated write reached fewer live members than its quorum.
+
+    The write is NOT acknowledged: retry it.  Any copies that did land
+    are queued for anti-entropy repair on the members that missed them,
+    so reads keep routing to members holding the freshest value."""
+
+
+# Health states a node moves through (consecutive data-path errors and the
+# probe tick drive the transitions; see `ClusterStore._record_error`):
+#
+#     alive --errors--> suspect --more errors--> dead --probe ok-->
+#     recovering --resync_node()--> alive   (suspect heals straight back
+#     to alive on any success)
+#
+# dead/recovering members serve no reads; suspect members are deprioritized
+# in the least-loaded choice but still serve.
+HEALTH_STATES = ("alive", "suspect", "dead", "recovering")
+_NOT_SERVING = ("dead", "recovering")
+_HEALTH_RANK = {"alive": 0, "suspect": 1, "recovering": 2, "dead": 3}
+
+
+class _NodeHealth:
+    """Mutable per-node health record (guarded by the cluster.health lock;
+    `state` is additionally read unlocked as a monotonic-enough snapshot
+    on the hot read path)."""
+
+    __slots__ = ("state", "errors", "last_error", "since", "transitions")
+
+    def __init__(self):
+        self.state = "alive"
+        self.errors = 0
+        self.last_error: Optional[str] = None
+        self.since = time.monotonic()
+        self.transitions = 0
+
+    def set(self, state: str) -> None:
+        if state != self.state:
+            self.state = state
+            self.since = time.monotonic()
+            self.transitions += 1
 
 
 def _default_node_factory(node: int, spec: DatasetSpec) -> CuboidStore:
@@ -295,6 +344,27 @@ class ClusterStore:
         # repr of the newest secondary error swallowed while rolling back a
         # failed grow (`_unwiden`); the primary error re-raises past it.
         self.last_unwiden_error: Optional[str] = None
+        # -- fault tolerance: health machine + anti-entropy repair queue --
+        # Health records are keyed by node identity (id(node)) so they
+        # survive index shifts across topology swaps; `_swap_topo` prunes
+        # entries whose node left the cluster.  Rank 22 sits between the
+        # move lock (20) and the repair lock (24): write paths record
+        # health while holding the move lock, and repair bookkeeping may
+        # follow a health check — never the other way around.
+        self._suspect_after = max(1, knobs.get_int("REPRO_SUSPECT_AFTER", 3))
+        self._dead_after = max(self._suspect_after, knobs.get_int("REPRO_DEAD_AFTER", 6))
+        self._health_lock = ordered_lock("cluster.health", 22)
+        self._health: Dict[int, _NodeHealth] = {}
+        # {id(node): {(r, channel, m), ...}} — keys a node missed (write
+        # failures, writes skipped while it was dead).  Reads route around
+        # a member that is dirty for the requested span; `resync_node`
+        # replays the set from replica peers under the move lock.
+        self._repair_lock = ordered_lock("cluster.repair", 24)
+        self._dirty: Dict[int, set] = {}
+        self.repair_enqueued = 0
+        self.last_probe_error: Optional[str] = None
+        self._prober: Optional[threading.Thread] = None
+        self._prober_stop = threading.Event()
 
     def _build_node(self, i: int, factory: Optional[NodeFactory] = None) -> CuboidStore:
         node = (factory or self._node_factory)(i, self.spec)
@@ -389,7 +459,15 @@ class ClusterStore:
                     agg[k] += log[k]
         return agg
 
+    def synchronize(self, timeout: float = 60.0) -> None:
+        """Grace-period barrier: block until every data op that was in
+        flight when this was called has drained (new ops are unaffected).
+        Raises ``TimeoutError`` when an op outlives ``timeout`` seconds —
+        the signal a hung node is wedging topology changes."""
+        self._gate.synchronize(timeout)
+
     def close(self) -> None:
+        self.stop_prober()
         for node in self._topo.nodes:
             node.close()  # flushes + stops per-node write-behind flushers
         if self._pool is not None:
@@ -425,6 +503,228 @@ class ClusterStore:
         futures = {n: pool.submit(trace.bind(job)) for n, job in jobs.items()}
         return {n: f.result() for n, f in futures.items()}
 
+    def _fan_out_checked(
+        self, jobs: Dict[int, Callable[[], object]], budget: Optional[float] = None
+    ) -> Dict[int, Tuple[bool, object]]:
+        """Failure-isolating fan-out: ``{node: (ok, value_or_error)}``.
+
+        Unlike `_fan_out`, one node's exception never aborts the batch —
+        the degraded paths need to know exactly which members failed so
+        their pieces can be re-routed.  With a ``budget`` (seconds), each
+        future is waited at most the budget remaining when its turn
+        comes; an expired node reports a ``TimeoutError`` and its job is
+        abandoned to finish in the background — a hung node is never
+        waited on past the caller's deadline."""
+        pool = self._pool
+        out: Dict[int, Tuple[bool, object]] = {}
+        if pool is None:
+            for n, job in jobs.items():
+                try:
+                    out[n] = (True, job())
+                except Exception as e:
+                    out[n] = (False, e)
+            return out
+        before_submit(allow=(self._move_lock,))
+        futures = {n: pool.submit(trace.bind(job)) for n, job in jobs.items()}
+        t_end = None if budget is None else time.monotonic() + budget
+        for n, f in futures.items():
+            try:
+                t = None if t_end is None else max(0.001, t_end - time.monotonic())
+                out[n] = (True, f.result(timeout=t))
+            except cf.TimeoutError:
+                f.cancel()
+                out[n] = (False, TimeoutError(
+                    f"node {n} op exceeded the deadline budget"))
+            except Exception as e:
+                out[n] = (False, e)
+        return out
+
+    # -- node health (alive / suspect / dead / recovering) -------------------
+    def _health_state(self, node: CuboidStore) -> str:
+        # unlocked dict read: a benign snapshot — health transitions are
+        # inherently racy against in-flight ops, and the paths consulting
+        # this tolerate either side of the transition
+        h = self._health.get(id(node))
+        return h.state if h is not None else "alive"
+
+    def _record_error(self, node: CuboidStore, exc: BaseException) -> None:
+        """Data-path failure on a node: count it, degrade health on the
+        consecutive-error thresholds (alive→suspect→dead)."""
+        with self._health_lock:
+            h = self._health.get(id(node))
+            if h is None:
+                h = self._health[id(node)] = _NodeHealth()
+            h.errors += 1
+            h.last_error = repr(exc)
+            if h.state in ("alive", "recovering") and h.errors >= self._suspect_after:
+                h.set("suspect")
+            if h.state == "suspect" and h.errors >= self._dead_after:
+                h.set("dead")
+
+    def _record_ok(self, node: CuboidStore) -> None:
+        """Data-path success: clear the consecutive-error count; a suspect
+        member heals straight back to alive.  Dead/recovering members do
+        NOT resurrect here — one lucky success must not short-circuit the
+        probe + anti-entropy resync re-admission path."""
+        h = self._health.get(id(node))  # unlocked fast path: nothing to clear
+        if h is None or (h.errors == 0 and h.state != "suspect"):
+            return
+        with self._health_lock:
+            h = self._health.get(id(node))
+            if h is None:
+                return
+            h.errors = 0
+            if h.state == "suspect":
+                h.set("alive")
+
+    def _probe_ok(self, node: CuboidStore) -> None:
+        with self._health_lock:
+            h = self._health.get(id(node))
+            if h is None:
+                return
+            h.errors = 0
+            if h.state == "suspect":
+                h.set("alive")
+            elif h.state == "dead":
+                # back from the dead: it must resync (anti-entropy) before
+                # serving reads again — `resync_node` flips it to alive
+                h.set("recovering")
+
+    def probe_health(self) -> Dict[str, object]:
+        """One cheap health-probe tick over every node (a single-key
+        existence check per node — no data transfer).
+
+        Failed probes count toward the consecutive-error thresholds, so a
+        dead node is detected even on an idle cluster; a successful probe
+        heals suspect→alive and advances dead→recovering.  Runs inside
+        the op gate so topology changes drain it like any data op.
+        ``ClusterWatch.sample()`` calls this every supervisor tick;
+        `start_prober` runs it from a dedicated thread instead."""
+        summary: Dict[str, object] = {"probed": 0, "ok": 0, "failed": 0}
+        with self._gate.op():
+            topo = self._topo
+            for node in topo.nodes:
+                summary["probed"] += 1
+                try:
+                    node.has_cuboid(0, 0, 0)
+                except Exception as e:
+                    summary["failed"] += 1
+                    self._record_error(node, e)
+                else:
+                    summary["ok"] += 1
+                    self._probe_ok(node)
+            summary["health"] = [self._health_state(n) for n in topo.nodes]
+        return summary
+
+    def start_prober(self, interval: float = 0.25) -> None:
+        """Run `probe_health` on a background tick (idempotent).  Only
+        needed when no `StorageSupervisor` is watching the cluster — its
+        sample() already ticks the probe."""
+        if self._prober is not None and self._prober.is_alive():
+            return
+        self._prober_stop.clear()
+
+        def loop():
+            while not self._prober_stop.wait(interval):
+                try:
+                    self.probe_health()
+                except Exception as e:
+                    # mid-close or mid-swap; record it and keep ticking
+                    self.last_probe_error = repr(e)
+
+        self._prober = threading.Thread(
+            target=loop, name="ocp-health-prober", daemon=True)
+        self._prober.start()
+
+    def stop_prober(self) -> None:
+        self._prober_stop.set()
+        prober, self._prober = self._prober, None
+        if prober is not None:
+            prober.join(timeout=10.0)
+
+    def mark_dead(self, node: int) -> None:
+        """Operator override: declare a node dead right now (reads stop
+        routing to it; writes skip it and queue repairs)."""
+        topo = self._topo
+        with self._health_lock:
+            key = id(topo.nodes[node])
+            h = self._health.get(key)
+            if h is None:
+                h = self._health[key] = _NodeHealth()
+            h.set("dead")
+
+    def node_health(self) -> List[Dict[str, object]]:
+        """Per-node health snapshot — the ``/stats`` section and the
+        ``repro_node_health`` metric family."""
+        with self._gate.op():
+            topo = self._topo
+        repair = self._repair_counts(topo)
+        out: List[Dict[str, object]] = []
+        with self._health_lock:
+            for i, node in enumerate(topo.nodes):
+                h = self._health.get(id(node))
+                out.append({
+                    "node": i,
+                    "state": h.state if h else "alive",
+                    "consecutive_errors": h.errors if h else 0,
+                    "transitions": h.transitions if h else 0,
+                    "last_error": h.last_error if h else None,
+                    "repair_pending": repair[i],
+                })
+        return out
+
+    # -- anti-entropy repair queue -------------------------------------------
+    def _mark_dirty(self, node: CuboidStore, key: Key) -> None:
+        with self._repair_lock:
+            self._dirty.setdefault(id(node), set()).add(key)
+            self.repair_enqueued += 1
+
+    def _clear_dirty(self, node: CuboidStore, keys: Iterable[Key]) -> None:
+        """A successful write to ``node`` settles its pending repairs for
+        those keys: the node now holds the freshest value, and replaying
+        an older mark from a peer could roll an acked write back."""
+        with self._repair_lock:
+            dirty = self._dirty.get(id(node))
+            if not dirty:
+                return
+            dirty.difference_update(keys)
+            if not dirty:
+                del self._dirty[id(node)]
+
+    def _repair_counts(self, topo: _Topology) -> List[int]:
+        with self._repair_lock:
+            return [len(self._dirty.get(id(n), ())) for n in topo.nodes]
+
+    def _dirty_overlap(self, node: CuboidStore, r: int, channel: int,
+                       a: int, b: int) -> bool:
+        """Does ``node`` hold a pending repair inside [a, b) at (r,
+        channel)?  Such a member missed a write there — reads must prefer
+        a member holding the freshest value."""
+        with self._repair_lock:
+            dirty = self._dirty.get(id(node))
+            if not dirty:
+                return False
+            if b - a == 1:
+                return (r, channel, a) in dirty
+            return any(k[0] == r and k[1] == channel and a <= k[2] < b
+                       for k in dirty)
+
+    def _degraded_cluster(self, topo: _Topology) -> bool:
+        """True when any current node is not alive or repairs are queued —
+        the signal that flips writes onto the quorum slow path (under the
+        move lock, serialized with the repair/migration copiers).
+        Unlocked reads: a transition mid-write at worst sends one write
+        down the fast path, which then fails exactly as it would have
+        before health tracking existed."""
+        if self._dirty:
+            return True
+        if self._health:
+            for node in topo.nodes:
+                h = self._health.get(id(node))
+                if h is not None and h.state != "alive":
+                    return True
+        return False
+
     # -- access heat ---------------------------------------------------------
     def _touch_heat(self, heat: Dict[Tuple[int, int], int], r: int, m: int, n: int = 1) -> None:
         key = (r, m >> self.heat_bits)
@@ -457,10 +757,12 @@ class ClusterStore:
     ) -> int:
         """Least-loaded member of a replica set (reads balance here).
 
-        Load is the node's ``PathStats.inflight`` gauge (cluster read jobs
-        it is serving *right now*) plus any pieces this caller already
-        assigned it, tie-broken by lifetime reads so an idle cluster still
-        round-robins instead of pinning the primary."""
+        Load is the node's health rank (suspect members are deprioritized
+        — they serve only when every alive member is busier), then the
+        ``PathStats.inflight`` gauge (cluster read jobs it is serving
+        *right now*) plus any pieces this caller already assigned it,
+        tie-broken by lifetime reads so an idle cluster still round-robins
+        instead of pinning the primary."""
         if len(members) == 1:
             return members[0]
         best = members[0]
@@ -468,6 +770,7 @@ class ClusterStore:
         for i in members:
             stats = topo.nodes[i].read_stats
             load = (
+                _HEALTH_RANK.get(self._health_state(topo.nodes[i]), 0),
                 stats.inflight + (assigned.get(i, 0) if assigned else 0),
                 stats.reads,
                 i,
@@ -476,27 +779,90 @@ class ClusterStore:
                 best, best_load = i, load
         return best
 
-    def _read_split(self, topo: _Topology, r: int, runs) -> Dict[int, List[Tuple[int, int]]]:
+    def _filter_members(
+        self,
+        topo: _Topology,
+        members: Tuple[int, ...],
+        exclude,
+        r: int,
+        channel: int,
+        a: int,
+        b: int,
+    ) -> Optional[Tuple[int, ...]]:
+        """Members eligible to serve reads of [a, b) at (r, channel).
+
+        Prefers members that are serving (not dead/recovering) and hold
+        no pending repair inside the span, falling back one tier at a
+        time so a fully degraded set still yields *something* to try
+        rather than failing outright.  Returns ``()`` when every member
+        is excluded (all failed this request), and ``None`` when only
+        per-key routing can find clean members (a multi-key span with
+        repairs scattered across every serving member)."""
+        cands = [i for i in members if i not in exclude]
+        if not cands:
+            return ()
+        serving = [i for i in cands
+                   if self._health_state(topo.nodes[i]) not in _NOT_SERVING]
+        pool = serving or cands
+        if self._dirty:
+            clean = [i for i in pool
+                     if not self._dirty_overlap(topo.nodes[i], r, channel, a, b)]
+            if clean:
+                return tuple(clean)
+            if b - a > 1:
+                return None
+        return tuple(pool)
+
+    def _read_split(
+        self,
+        topo: _Topology,
+        r: int,
+        runs,
+        channel: int = 0,
+        exclude=frozenset(),
+    ) -> Dict[int, List[Tuple[int, int]]]:
         """Split runs at partition boundaries and route each piece to the
-        least-loaded member of its replica set.  Every routed piece bumps
-        the read-heat bucket of its start index (piece-granular, not
-        per-cuboid — heat is a ranking signal, not an exact count)."""
+        least-loaded *eligible* member of its replica set (dead and
+        repair-pending members routed around; see `_filter_members`).
+        Every routed piece bumps the read-heat bucket of its start index
+        (piece-granular, not per-cuboid — heat is a ranking signal, not
+        an exact count).  Raises :class:`NoLiveReplica` when a piece has
+        no member left to try."""
         router = topo.router
-        if router.n_replicas == 1:
+        if router.n_replicas == 1 and not exclude:
+            # sole-owner routing: health filtering has no alternative to
+            # offer, so the fast path stands
             by_node = router.split_runs(r, runs)
             for pieces in by_node.values():
                 for a, b in pieces:
                     self._touch_heat(self._read_heat, r, a, b - a)
             return by_node
         assigned: Dict[int, int] = {}
-        by_node = {}
+        by_node: Dict[int, List[Tuple[int, int]]] = {}
         for start, stop in runs:
             for members, a, b in router.split_run_replicas(r, start, stop):
-                node = self._pick_replica(topo, members, assigned)
-                assigned[node] = assigned.get(node, 0) + 1
-                by_node.setdefault(node, []).append((a, b))
-                self._touch_heat(self._read_heat, r, a, b - a)
+                self._route_piece(topo, r, channel, members, a, b,
+                                  exclude, assigned, by_node)
         return by_node
+
+    def _route_piece(self, topo, r, channel, members, a, b, exclude,
+                     assigned, by_node) -> None:
+        cands = self._filter_members(topo, members, exclude, r, channel, a, b)
+        if cands is None:
+            # repairs scattered across every serving member: route per key
+            # so each lands on a member holding its freshest value
+            for m in range(a, b):
+                self._route_piece(topo, r, channel, members, m, m + 1,
+                                  exclude, assigned, by_node)
+            return
+        if not cands:
+            raise NoLiveReplica(
+                f"no serving replica for r={r} range [{a},{b}) "
+                f"(members {members}, excluded {sorted(exclude)})")
+        node = self._pick_replica(topo, cands, assigned)
+        assigned[node] = assigned.get(node, 0) + 1
+        by_node.setdefault(node, []).append((a, b))
+        self._touch_heat(self._read_heat, r, a, b - a)
 
     @staticmethod
     def _serving_job(node: CuboidStore, fn: Callable[[], object], idx: int) -> Callable[[], object]:
@@ -522,15 +888,65 @@ class ClusterStore:
                 return members + extras
         return members
 
+    def _call_node(self, node: CuboidStore, idx: int,
+                   fn: Callable[[], object], budget: Optional[float]) -> object:
+        """Run one node op, bounded by the caller's remaining deadline
+        budget.  Without a budget (or without a pool) the call runs
+        inline; with one it runs on the fan-out pool and is abandoned on
+        expiry — the worker finishes (or keeps hanging) in the background
+        while the caller fails over to the next replica."""
+        job = self._serving_job(node, fn, idx)
+        pool = self._pool
+        if budget is None or pool is None:
+            return job()
+        before_submit(allow=(self._move_lock,))
+        fut = pool.submit(trace.bind(job))
+        try:
+            return fut.result(timeout=max(0.001, budget))
+        except cf.TimeoutError:
+            fut.cancel()
+            raise TimeoutError(
+                f"node {idx} op exceeded the deadline budget") from None
+
     # -- single-cuboid ops (routed) ----------------------------------------
     def read_cuboid(self, r: int, m: int, channel: int = 0) -> np.ndarray:
         with self._gate.op():
             topo = self._topo
             members = topo.router.replica_set(r, m)
             self._touch_heat(self._read_heat, r, m)
-            node = topo.nodes[self._pick_replica(topo, members)]
-            with node.serving():
-                return node.read_cuboid(r, m, channel)
+            t_left = deadline.remaining()
+            t_end = None if t_left is None else time.monotonic() + t_left
+            tried: List[int] = []
+            last: Optional[BaseException] = None
+            while True:
+                cands = self._filter_members(topo, members, tried,
+                                             r, channel, m, m + 1)
+                if not cands:
+                    break
+                budget = None if t_end is None else t_end - time.monotonic()
+                if budget is not None and budget <= 0 and last is not None:
+                    break  # budget spent; surface the last failure
+                if budget is not None and len(cands) > 1:
+                    # Split the remainder across untried members: a hung
+                    # first replica must leave failover headroom.
+                    budget = budget / len(cands)
+                idx = self._pick_replica(topo, cands)
+                tried.append(idx)
+                node = topo.nodes[idx]
+                try:
+                    out = self._call_node(
+                        node, idx,
+                        functools.partial(node.read_cuboid, r, m, channel),
+                        budget)
+                except Exception as e:
+                    self._record_error(node, e)
+                    last = e
+                    continue  # retry onto the next surviving replica
+                self._record_ok(node)
+                return out
+            if last is not None:
+                raise last
+            raise NoLiveReplica(f"no serving replica for r={r} m={m}")
 
     def write_cuboid(self, r: int, m: int, data: np.ndarray, channel: int = 0) -> None:
         with self._gate.op():
@@ -538,39 +954,148 @@ class ClusterStore:
             members = topo.router.replica_set(r, m)
             self._touch_heat(self._write_heat, r, m)
             targets = self._write_targets(topo, r, m)
-            if len(targets) == len(members):
+            migrating = len(targets) != len(members)
+            if not migrating and not self._degraded_cluster(topo):
                 for node in targets:
                     topo.nodes[node].write_cuboid(r, m, data, channel)
-            else:
-                # double-write: the range is migrating and `targets` also
-                # names the members being added; serialize with the copier
-                # so a stale copy can't overwrite this write.
-                with self._move_lock:
-                    for node in targets:
-                        topo.nodes[node].write_cuboid(r, m, data, channel)
+                return
+            # Migrating double-writes and degraded-cluster writes both
+            # serialize with the copiers through the move lock: a stale
+            # copy (migration or repair) must never clobber this write.
+            # Migrating keys are strict (every reachable target must ack —
+            # a member added by the move becomes authoritative at swap and
+            # its old members get range-dropped, so a quorum miss there
+            # could strand the only fresh copy); others ack at a quorum of
+            # live members and queue misses for repair.
+            with self._move_lock:
+                self._write_degraded(
+                    topo, r, {m: data}, channel,
+                    targets_of=lambda _m: targets,
+                    strict_of=lambda _m: migrating)
 
     def has_cuboid(self, r: int, m: int, channel: int = 0) -> bool:
         with self._gate.op():
             topo = self._topo
             members = topo.router.replica_set(r, m)
-            return topo.nodes[members[0]].has_cuboid(r, m, channel)
+            tried: List[int] = []
+            last: Optional[BaseException] = None
+            while True:
+                cands = self._filter_members(topo, members, tried,
+                                             r, channel, m, m + 1)
+                if not cands:
+                    break
+                idx = self._pick_replica(topo, cands)
+                tried.append(idx)
+                node = topo.nodes[idx]
+                try:
+                    out = node.has_cuboid(r, m, channel)
+                except Exception as e:
+                    self._record_error(node, e)
+                    last = e
+                    continue
+                self._record_ok(node)
+                return out
+            if last is not None:
+                raise last
+            raise NoLiveReplica(f"no serving replica for r={r} m={m}")
 
     # -- batch ops (routed + parallel) -------------------------------------
     def read_run(self, r: int, start: int, stop: int, channel: int = 0) -> List[np.ndarray]:
         """Run read in curve order, split at partition boundaries; each
-        piece is served by the least-loaded member of its replica set."""
+        piece is served by the least-loaded eligible member of its
+        replica set, failing over to the next member on error."""
         with self._gate.op():
             topo = self._topo
             out: List[np.ndarray] = []
             assigned: Dict[int, int] = {}
             for members, a, b in topo.router.split_run_replicas(r, start, stop):
                 self._touch_heat(self._read_heat, r, a, b - a)
-                idx = self._pick_replica(topo, members, assigned)
-                assigned[idx] = assigned.get(idx, 0) + 1
-                node = topo.nodes[idx]
-                with node.serving():
-                    out.extend(node.read_run(r, a, b, channel))
+                out.extend(self._read_piece(topo, r, channel, members, a, b, assigned))
             return out
+
+    def _read_piece(self, topo, r, channel, members, a, b, assigned) -> List[np.ndarray]:
+        tried: List[int] = []
+        last: Optional[BaseException] = None
+        while True:
+            cands = self._filter_members(topo, members, tried, r, channel, a, b)
+            if cands is None:
+                blocks: List[np.ndarray] = []
+                for m in range(a, b):
+                    blocks.extend(self._read_piece(
+                        topo, r, channel, members, m, m + 1, assigned))
+                return blocks
+            if not cands:
+                break
+            idx = self._pick_replica(topo, cands, assigned)
+            tried.append(idx)
+            assigned[idx] = assigned.get(idx, 0) + 1
+            node = topo.nodes[idx]
+            try:
+                with node.serving():
+                    out = node.read_run(r, a, b, channel)
+            except Exception as e:
+                self._record_error(node, e)
+                last = e
+                continue
+            self._record_ok(node)
+            return out
+        if last is not None:
+            raise last
+        raise NoLiveReplica(f"no serving replica for r={r} range [{a},{b})")
+
+    def _fan_out_fetch(self, topo, r, runs, channel, node_call, merge) -> None:
+        """Shared failover engine for the batch fetch paths.
+
+        Splits ``runs`` across eligible replica members, fans out, and
+        re-routes the pieces of every failed (or deadline-expired) node
+        onto surviving members — round by round, excluding each member
+        that already failed this request — until every piece lands or no
+        member remains.  ``node_call(idx, node_runs)`` performs one
+        node's fetch; ``merge(result)`` folds a successful one in (a
+        retried sink write re-lands identical bytes in the same disjoint
+        slices, so double-merges are benign)."""
+        t_left = deadline.remaining()
+        t_end = None if t_left is None else time.monotonic() + t_left
+        failed: set = set()
+        pending = list(runs)
+        last: Optional[BaseException] = None
+        rounds = 0
+        while pending:
+            try:
+                by_node = self._read_split(topo, r, pending,
+                                           channel=channel, exclude=failed)
+            except NoLiveReplica:
+                if last is not None:
+                    raise last from None
+                raise
+            jobs = {
+                idx: self._serving_job(
+                    topo.nodes[idx],
+                    functools.partial(node_call, idx, node_runs),
+                    idx,
+                )
+                for idx, node_runs in by_node.items()
+            }
+            budget = None if t_end is None else t_end - time.monotonic()
+            if budget is not None:
+                # Leave failover headroom: early rounds get a slice of the
+                # remainder so a hung node can't starve the retry rounds.
+                rounds_left = max(1, topo.router.n_replicas - rounds)
+                if rounds_left > 1:
+                    budget = budget / rounds_left
+            rounds += 1
+            results = self._fan_out_checked(jobs, budget)
+            pending = []
+            for idx, (ok, value) in results.items():
+                node = topo.nodes[idx]
+                if ok:
+                    self._record_ok(node)
+                    merge(value)
+                else:
+                    self._record_error(node, value)
+                    last = value
+                    failed.add(idx)
+                    pending.extend(by_node[idx])
 
     def fetch_runs(
         self,
@@ -589,20 +1114,12 @@ class ClusterStore:
         """
         with self._gate.op():
             topo = self._topo
-            by_node = self._read_split(topo, r, list(runs))
-            jobs = {
-                node: self._serving_job(
-                    topo.nodes[node],
-                    functools.partial(
-                        topo.nodes[node].fetch_runs, r, node_runs, channel, decode=decode
-                    ),
-                    node,
-                )
-                for node, node_runs in by_node.items()
-            }
             merged: Dict[int, object] = {}
-            for part in self._fan_out(jobs).values():
-                merged.update(part)
+
+            def node_call(idx, node_runs):
+                return topo.nodes[idx].fetch_runs(r, node_runs, channel, decode=decode)
+
+            self._fan_out_fetch(topo, r, list(runs), channel, node_call, merged.update)
             return merged
 
     def fetch_blocks(
@@ -623,21 +1140,16 @@ class ClusterStore:
         """
         with self._gate.op():
             topo = self._topo
-            by_node = self._read_split(topo, r, list(runs))
-            jobs = {
-                node: self._serving_job(
-                    topo.nodes[node],
-                    functools.partial(
-                        topo.nodes[node].fetch_blocks, r, node_runs, channel, sink=sink
-                    ),
-                    node,
-                )
-                for node, node_runs in by_node.items()
-            }
             merged: Dict[int, Optional[np.ndarray]] = {}
-            for part in self._fan_out(jobs).values():
+
+            def node_call(idx, node_runs):
+                return topo.nodes[idx].fetch_blocks(r, node_runs, channel, sink=sink)
+
+            def merge(part):
                 if part:
                     merged.update(part)
+
+            self._fan_out_fetch(topo, r, list(runs), channel, node_call, merge)
             return merged
 
     def run_batch(self, jobs: Sequence[Callable[[], object]]) -> List[object]:
@@ -684,6 +1196,26 @@ class ClusterStore:
         with self._gate.op():
             topo = self._topo
             moves = self._moves.get(r, ()) if (self._moves and topo is self._moves_topo) else ()
+            if self._degraded_cluster(topo):
+                # Degraded: some member is unhealthy or holds queued
+                # repairs — every block takes the quorum path under the
+                # move lock, serialized with the repair/migration copiers.
+                for m in blocks:
+                    self._touch_heat(self._write_heat, r, m)
+
+                def targets_of(m):
+                    members = topo.router.replica_set(r, m)
+                    extras = _move_extras(moves, m, members) if moves else ()
+                    return members + extras
+
+                def strict_of(m):
+                    members = topo.router.replica_set(r, m)
+                    return bool(moves) and bool(_move_extras(moves, m, members))
+
+                with self._move_lock:
+                    self._write_degraded(topo, r, dict(blocks), channel,
+                                         targets_of, strict_of)
+                return
             by_node: Dict[int, Dict[int, np.ndarray]] = {}
             doubling: Dict[int, Dict[int, np.ndarray]] = {}
             for m, data in blocks.items():
@@ -716,6 +1248,70 @@ class ClusterStore:
                 with self._move_lock:
                     self._fan_out(jobs)
 
+    def _write_degraded(
+        self,
+        topo: _Topology,
+        r: int,
+        blocks: Dict[int, np.ndarray],
+        channel: int,
+        targets_of: Callable[[int], Tuple[int, ...]],
+        strict_of: Callable[[int], bool],
+    ) -> None:
+        """Replicated write with per-key quorum accounting (the degraded /
+        migrating slow path; callers hold the move lock).
+
+        ``targets_of(m)`` lists every node key ``m`` must reach.  Dead
+        members are skipped outright — their miss goes straight to the
+        repair queue (a write must never wait on a dead node).  Every
+        other member is attempted serially; a failure degrades its health
+        and queues the miss.  Each key must then ack on a quorum —
+        majority of its non-dead targets, or ALL of them when
+        ``strict_of(m)`` (migrating keys) — or :class:`WriteQuorumError`
+        raises and the write is unacknowledged.  Either way each miss is
+        marked dirty on the member that missed it, so reads keep routing
+        to members holding the freshest value until repair replays it."""
+        per_node: Dict[int, Dict[int, np.ndarray]] = {}
+        attempted: Dict[int, List[int]] = {}  # m -> non-dead targets
+        for m, data in blocks.items():
+            attempted[m] = []
+            for t in targets_of(m):
+                if self._health_state(topo.nodes[t]) == "dead":
+                    self._mark_dirty(topo.nodes[t], (r, channel, m))
+                else:
+                    attempted[m].append(t)
+                    per_node.setdefault(t, {})[m] = data
+        failed: Dict[int, BaseException] = {}
+        for idx in sorted(per_node):
+            node = topo.nodes[idx]
+            try:
+                node.store_cuboids(r, per_node[idx], channel)
+            except Exception as e:
+                self._record_error(node, e)
+                failed[idx] = e
+                for m in per_node[idx]:
+                    self._mark_dirty(node, (r, channel, m))
+            else:
+                self._record_ok(node)
+                # This node now holds the freshest value for these keys:
+                # drop any stale repair marks so a later resync can never
+                # replay an older peer copy over an acked write.
+                self._clear_dirty(node,
+                                  [(r, channel, m) for m in per_node[idx]])
+        under: List[str] = []
+        for m in blocks:
+            live = attempted[m]
+            acks = sum(1 for t in live if t not in failed)
+            quorum = len(live) if strict_of(m) else (len(live) // 2 + 1)
+            quorum = max(1, quorum)
+            if acks < quorum:
+                under.append(f"m={m}: {acks}/{quorum} acks "
+                             f"(targets {tuple(targets_of(m))})")
+        if under:
+            last = next(iter(failed.values())) if failed else None
+            raise WriteQuorumError(
+                f"write quorum not reached at r={r}: " + "; ".join(under[:4])
+            ) from last
+
     # -- elasticity (paper §6: dynamically redistribute data) ---------------
     def topology(self) -> Dict[str, object]:
         """Introspection snapshot served by ``GET /topology``."""
@@ -747,6 +1343,8 @@ class ClusterStore:
                 "write_behind_nodes": sum(
                     1 for n in topo.nodes if n.write_behind is not None
                 ),
+                "health": [self._health_state(n) for n in topo.nodes],
+                "repair_pending": sum(self._repair_counts(topo)),
             }
 
     def add_node(
@@ -962,8 +1560,118 @@ class ClusterStore:
         finally:
             self._admin_lock.release()
 
+    def resync_node(self, node: int, wait: bool = True) -> Dict[str, object]:
+        """Anti-entropy resync: replay a node's queued repair keys from
+        its replica peers, then re-admit it (recovering → alive).
+
+        Every key the node missed (failed writes, writes skipped while it
+        was dead) sits in its repair set.  Each batch is copied under the
+        move lock from a serving member of the key's *current* replica
+        set — writes overlapping a repair also serialize on that lock, so
+        a copy can never clobber a fresher concurrent write.  Deletes
+        replay too (a missing source blob ingests as ``None``).  Keys
+        whose replica set no longer lists the node are discarded: the
+        range moved off it, and resurrecting data it no longer owns would
+        leak stale reads after a later reassignment.
+
+        The supervisor calls this for every recovering node (and any
+        alive node with a repair backlog); ``healed=False`` means dirt
+        kept accumulating faster than eight replay rounds drained it —
+        the node is still failing writes and stays un-readmitted."""
+        if not self._admin_lock.acquire(blocking=wait):
+            raise RebalanceInFlight("a topology change is already in flight")
+        try:
+            topo = self._topo
+            n = len(topo.nodes)
+            idx = node if node >= 0 else n + node
+            if not (0 <= idx < n):
+                raise ValueError(f"node {node} out of range for {n} nodes")
+            target = topo.nodes[idx]
+            copied = discarded = rounds = 0
+            while rounds < 8:
+                with self._repair_lock:
+                    dirty = self._dirty.pop(id(target), None)
+                if not dirty:
+                    break
+                rounds += 1
+                try:
+                    c, d = self._replay_dirty(topo, idx, sorted(dirty))
+                except BaseException:
+                    # a source failed mid-replay: the popped keys are not
+                    # repaired — put them back so nothing is forgotten
+                    with self._repair_lock:
+                        self._dirty.setdefault(id(target), set()).update(dirty)
+                    raise
+                copied += c
+                discarded += d
+            with self._repair_lock:
+                healed = not self._dirty.get(id(target))
+            if healed:
+                with self._health_lock:
+                    h = self._health.get(id(target))
+                    if h is not None:
+                        h.errors = 0
+                        if h.state != "alive":
+                            h.set("alive")
+            return {"node": idx, "resynced": copied, "discarded": discarded,
+                    "rounds": rounds, "healed": healed}
+        finally:
+            self._admin_lock.release()
+
+    def _replay_dirty(self, topo: _Topology, idx: int,
+                      keys: List[Key]) -> Tuple[int, int]:
+        """Copy the freshest value of each dirty key onto node ``idx``
+        from the healthiest other member of its replica set, in run
+        batches under the move lock.  Returns (copied, discarded)."""
+        target = topo.nodes[idx]
+        router = topo.router
+        copied = discarded = 0
+        by_rc: Dict[Tuple[int, int], List[int]] = {}
+        for r, c, m in keys:
+            if idx not in router.replica_set(r, m):
+                discarded += 1  # range moved off this node; nothing to repair
+                continue
+            by_rc.setdefault((r, c), []).append(m)
+        for (r, c), ms in sorted(by_rc.items()):
+            ms.sort()
+            for i in range(0, len(ms), 64):
+                chunk = ms[i:i + 64]
+                by_src: Dict[int, List[int]] = {}
+                for m in chunk:
+                    peers = [s for s in router.replica_set(r, m) if s != idx]
+                    if not peers:
+                        # replication=1: the node is the sole owner — the
+                        # missed value exists nowhere else, and the write
+                        # that missed was never acknowledged
+                        discarded += 1
+                        continue
+                    # A peer that is itself dirty for this key missed the
+                    # acked write too — replaying from it would roll the
+                    # key back.  Every acked write leaves at least one
+                    # clean acker, so clean-first is also freshest-first.
+                    src = min(peers, key=lambda s: (
+                        self._dirty_overlap(topo.nodes[s], r, c, m, m + 1),
+                        _HEALTH_RANK.get(self._health_state(topo.nodes[s]), 0),
+                        s))
+                    by_src.setdefault(src, []).append(m)
+                for src, sms in sorted(by_src.items()):
+                    with self._move_lock:
+                        blobs = topo.nodes[src].fetch_runs(
+                            r, morton.indices_to_runs(sms), c)
+                        items = [((r, c, m), blobs.get(m)) for m in sms]
+                        target.ingest_blobs(items)
+                    copied += len(items)
+        return copied, discarded
+
     def _swap_topo(self, topo: _Topology) -> None:
         self._topo = topo  # atomic reference swap; ops snapshot it once
+        ids = {id(n) for n in topo.nodes}
+        with self._health_lock:
+            for key in [k for k in self._health if k not in ids]:
+                del self._health[key]
+        with self._repair_lock:
+            for key in [k for k in self._dirty if k not in ids]:
+                del self._dirty[key]
         if self._cfg_max_workers is not None:
             return  # caller pinned the worker count; keep it
         pool = self._pool

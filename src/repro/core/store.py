@@ -132,7 +132,8 @@ class PathStats:
     read_stats.cache_hits + read_stats.cache_misses`` — the coherence
     invariant the stress suite asserts.  ``queue_depth`` / ``queue_peak``
     mirror the write-behind queue occupancy (gauges, updated on enqueue
-    and flush).
+    and flush); ``queue_retries`` / ``queue_poisoned`` mirror the queue's
+    flush-retry and poison-quarantine counters.
 
     ``decoded_blocks`` / ``decode_s`` measure decompress work on the read
     path (the paper's assembly bound).  ``prefetch_issued`` /
@@ -152,6 +153,8 @@ class PathStats:
     cache_misses: int = 0   # lookups that had to go below the cache
     queue_depth: int = 0    # write-behind pending writes (gauge)
     queue_peak: int = 0     # max pending writes observed (gauge)
+    queue_retries: int = 0   # write-behind entries applied on a retry pass
+    queue_poisoned: int = 0  # write-behind keys quarantined as poison
     decoded_blocks: int = 0  # blobs decompressed on the read path
     decode_s: float = 0.0    # wall time inside decompress (incl. workers)
     prefetch_issued: int = 0    # schedule-lookahead prefetch tasks launched
@@ -478,6 +481,8 @@ class CuboidStore:
             return 0
         n = self.write_behind.flush()
         self.write_stats.queue_depth = self.write_behind.depth
+        self.write_stats.queue_retries = self.write_behind.retried
+        self.write_stats.queue_poisoned = self.write_behind.poisoned
         return n
 
     def close(self) -> None:
@@ -602,6 +607,8 @@ class CuboidStore:
                 self.write_behind.enqueue_many(items)
                 self.write_stats.queue_depth = self.write_behind.depth
                 self.write_stats.queue_peak = self.write_behind.depth_peak
+                self.write_stats.queue_retries = self.write_behind.retried
+                self.write_stats.queue_poisoned = self.write_behind.poisoned
             else:
                 target = self.write_backend or self.read_backend
                 # A tombstone-capable write tier shadows the read path

@@ -1,5 +1,9 @@
+from .faults import (FaultInjected, FaultPlan, FaultyNode, NodeCrashed,
+                     crash_schedule_hook, faulty_factory)
 from .supervisor import (ClusterWatch, FailureInjector, StorageSupervisor,
                          StragglerMonitor, TrainingSupervisor, WorkerFailure)
 
 __all__ = ["ClusterWatch", "FailureInjector", "StorageSupervisor",
-           "StragglerMonitor", "TrainingSupervisor", "WorkerFailure"]
+           "StragglerMonitor", "TrainingSupervisor", "WorkerFailure",
+           "FaultInjected", "FaultPlan", "FaultyNode", "NodeCrashed",
+           "crash_schedule_hook", "faulty_factory"]

@@ -98,22 +98,38 @@ class ClusterWatch:
     pressure.  The watch only *advises*; invoking the verbs stays with
     the operator (or the caller's loop) because both move data.
 
-    Works against any store with ``topology()``; queue and heat signals
-    degrade gracefully when the store lacks them (single-node tiers).
+    The watch is also the cluster's failure detector tick: ``sample()``
+    drives ``probe_health()`` when the store has one, and ``advise()``
+    turns node health into two more verbs — ``failover`` when a node has
+    stayed dead for ``dead_ticks`` consecutive samples (debounced so one
+    probe blip never evicts a node), and ``resync`` for a recovering node
+    (or a live one with queued repair writes) so it is caught up via
+    anti-entropy before serving reads again.
+
+    Works against any store with ``topology()``; queue, heat, and health
+    signals degrade gracefully when the store lacks them (single-node
+    tiers).
     """
 
     def __init__(self, store, skew: float = 1.5, max_queue_depth: int = 256,
-                 heat_top: int = 4, max_sealed_segments: int = 1):
+                 heat_top: int = 4, max_sealed_segments: int = 1,
+                 dead_ticks: int = 2):
         self.store = store
         self.skew = skew                    # max/mean occupancy ratio that trips
         self.max_queue_depth = max_queue_depth
         self.heat_top = heat_top
         # sealed log segments across the cluster that trip "compact"
         self.max_sealed_segments = max_sealed_segments
+        # consecutive dead samples before failover is advised
+        self.dead_ticks = max(1, int(dead_ticks))
+        self._dead_streak: Dict[int, int] = {}
+        self._last_n_nodes: Optional[int] = None
         self.history: List[Dict] = []
 
     def sample(self) -> Dict:
         """One gauge snapshot, appended to ``history``."""
+        if hasattr(self.store, "probe_health"):
+            self.store.probe_health()  # the cheap failure-detector tick
         topo = (self.store.topology() if hasattr(self.store, "topology")
                 else {"n_nodes": 1, "keys_per_node": []})
         replication = int(topo.get("replication", 1))
@@ -139,6 +155,23 @@ class ClusterWatch:
         if hasattr(self.store, "access_heat"):
             heat = self.store.access_heat(top=self.heat_top)
             snap["hot"] = [tuple(row) for row in heat["read"]]
+        snap["health"] = [str(h) for h in topo.get("health", [])]
+        snap["repair"] = []
+        if hasattr(self.store, "node_health"):
+            snap["repair"] = [int(h["repair_pending"])
+                              for h in self.store.node_health()]
+        # Debounce death: a node must stay dead across consecutive samples
+        # before failover fires.  Streaks are keyed by node index, so any
+        # membership change (indexes shift) resets them all.
+        if self._last_n_nodes != snap["n_nodes"]:
+            self._dead_streak.clear()
+            self._last_n_nodes = snap["n_nodes"]
+        for i, state in enumerate(snap["health"]):
+            if state == "dead":
+                self._dead_streak[i] = self._dead_streak.get(i, 0) + 1
+            else:
+                self._dead_streak.pop(i, None)
+        snap["dead_streaks"] = dict(self._dead_streak)
         self.history.append(snap)
         return snap
 
@@ -176,6 +209,28 @@ class ClusterWatch:
                 "reason": (f"effective replication {snap['replication']} < "
                            f"target {snap['replication_target']}"),
             })
+        health = snap.get("health", [])
+        repair = snap.get("repair", [])
+        for i, state in enumerate(health):
+            backlog = repair[i] if i < len(repair) else 0
+            if state == "recovering" or (state == "alive" and backlog > 0):
+                actions.append({
+                    "action": "resync",
+                    "node": i,
+                    "reason": (f"node {i} is {state} with {backlog} repair "
+                               f"write(s) queued; anti-entropy resync"),
+                })
+        if not snap.get("rebalancing", False):
+            streaks = snap.get("dead_streaks", {})
+            for i, state in enumerate(health):
+                if state == "dead" and streaks.get(i, 0) >= self.dead_ticks:
+                    actions.append({
+                        "action": "failover",
+                        "node": i,
+                        "reason": (f"node {i} dead for {streaks[i]} "
+                                   f"consecutive samples; promote replicas"),
+                    })
+                    break  # one removal per tick: indexes shift afterwards
         return actions
 
     def step(self) -> List[Dict]:
@@ -197,19 +252,30 @@ class StorageSupervisor:
     * ``re_replicate`` — heal under-replicated segments after a shrink
       (``replication`` below ``replication_target``),
     * ``rebalance`` — only when ``allow_rebalance=True``; occupancy moves
-      whole key ranges, so it stays opt-in.
+      whole key ranges, so it stays opt-in,
+    * ``failover`` — remove a node the health machine has held dead for
+      ``dead_ticks`` samples (re-verified against ``node_health()`` at
+      execution time so a healed or already-removed node is skipped); the
+      removal migration itself promotes replicas, and any residual gap is
+      healed by the existing ``re_replicate`` advice,
+    * ``resync`` — anti-entropy catch-up for a recovering node (or a live
+      one with queued repair writes) before it serves reads again.
 
     Topology verbs run with ``wait=False`` and a concurrent admin op just
-    skips the tick (the advice re-fires next tick if still true).
-    ``log`` records every executed action for inspection.
+    skips the tick (the advice re-fires next tick if still true); any
+    other verb failure is swallowed the same way — recorded on the action
+    dict, never allowed to kill the supervisor thread.  ``log`` records
+    every executed action for inspection.
     """
 
     def __init__(self, store, watch: Optional[ClusterWatch] = None,
-                 interval: float = 0.25, allow_rebalance: bool = False):
+                 interval: float = 0.25, allow_rebalance: bool = False,
+                 allow_failover: bool = True):
         self.store = store
         self.watch = watch or ClusterWatch(store)
         self.interval = interval
         self.allow_rebalance = allow_rebalance
+        self.allow_failover = allow_failover
         self.log: List[Dict] = []
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -228,10 +294,25 @@ class StorageSupervisor:
             elif (kind == "rebalance" and self.allow_rebalance
                     and hasattr(store, "rebalance")):
                 store.rebalance(wait=False)
+            elif kind == "resync" and hasattr(store, "resync_node"):
+                store.resync_node(action["node"], wait=False)
+            elif (kind == "failover" and self.allow_failover
+                    and hasattr(store, "remove_node")):
+                idx = action["node"]
+                health = (store.node_health()
+                          if hasattr(store, "node_health") else [])
+                if not (0 <= idx < len(health)) or health[idx]["state"] != "dead":
+                    return False  # healed or already removed since advised
+                store.remove_node(idx, wait=False)
             else:
                 return False
         except RebalanceInFlight:
             return False  # an admin op holds the lock; re-advised next tick
+        except Exception as e:
+            # The supervisor tick must outlive any one verb: record and
+            # move on (the advice re-fires next tick if still true).
+            action["error"] = repr(e)
+            return False
         return True
 
     def step(self) -> List[Dict]:

@@ -15,9 +15,11 @@ from ..cluster import (
     dispatch as volume_dispatch,
     url_dispatch,
 )
+from .client import RetryingClient
 from .http_front import FrontDoor
 
 __all__ = [
+    "RetryingClient",
     "make_serve_step",
     "make_prefill_step",
     "ContinuousBatcher",

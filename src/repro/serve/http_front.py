@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..analysis.witness import ordered_lock
+from ..cluster import deadline
 from ..cluster.api import ApiError, parse_url
 from ..cluster.handlers import HANDLERS, Request, Response, VolumeService, _error, get_cutout
 from ..obs import log as obs_log
@@ -201,6 +202,7 @@ class FrontDoor:
         admit_timeout: float = 0.5,
         coalesce: bool = True,
         coalesce_max: int = 16,
+        retry_after: int = 1,
     ):
         self.service = service
         self._host = host
@@ -212,6 +214,9 @@ class FrontDoor:
             admit_limit = 2 * max([s for s in slots if s] or [2]) + 2
         self.admit_limit = int(admit_limit)
         self.admit_timeout = admit_timeout
+        # Advertised back-off for shed (503) responses, in whole seconds
+        # (the retrying client honours it over its own backoff schedule).
+        self.retry_after = max(1, int(retry_after))
         self._sem = threading.BoundedSemaphore(self.admit_limit)
         self.coalescer = _CutoutCoalescer(service, coalesce_max) if coalesce else None
         self._server: Optional[ThreadingHTTPServer] = None
@@ -309,9 +314,13 @@ class FrontDoor:
                 503, f"admission limit ({self.admit_limit} in flight) reached; retry"
             )
         try:
-            if verb == "GET /cutout" and self.coalescer is not None:
-                return verb, self.coalescer.submit(request)
-            return verb, HANDLERS[verb](self.service, request)
+            # The deadline budget opened here propagates (thread-locally)
+            # into the cluster's replicated read paths: no single hung
+            # node may stall this request past REPRO_OP_DEADLINE_MS.
+            with deadline.budget():
+                if verb == "GET /cutout" and self.coalescer is not None:
+                    return verb, self.coalescer.submit(request)
+                return verb, HANDLERS[verb](self.service, request)
         finally:
             self._sem.release()
 
@@ -407,7 +416,13 @@ class FrontDoor:
             content_type = str(resp.get("content_type", "text/plain; charset=utf-8"))
             return status, {"Content-Type": content_type}, payload
         payload = json.dumps(resp, default=_json_default).encode("utf-8")
-        return status, {"Content-Type": "application/json"}, payload
+        headers = {"Content-Type": "application/json"}
+        if status == 503:
+            # Shed responses tell the client when to come back; the
+            # retrying client (serve.client) honours this over its own
+            # backoff schedule.
+            headers["Retry-After"] = str(self.retry_after)
+        return status, headers, payload
 
 
 class _RequestHandler(BaseHTTPRequestHandler):

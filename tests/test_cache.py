@@ -275,19 +275,64 @@ def test_write_behind_backpressure_bounds_queue():
     store.close()
 
 
-def test_write_behind_error_is_loud():
-    class FailingBackend(MemoryBackend):
-        def put_many(self, items):
-            raise IOError("disk full")
+def test_write_behind_retries_transient_flush_failures():
+    """A flush failure no longer parks the queue: the batch is retried
+    with backoff and applies once the backend recovers."""
+    calls = {"n": 0}
 
-    store = CuboidStore(spec(), backend=FailingBackend())
-    enable_write_behind(store, max_items=8)
-    store.write_cuboid(0, 0, np.full(CUBOID, 1, np.uint8))
-    with pytest.raises(RuntimeError, match="write-behind"):
-        store.flush()
-    with pytest.raises(RuntimeError):
-        store.close()
-    store.write_behind = None  # detach the poisoned queue
+    class FlakyBackend(MemoryBackend):
+        def put_many(self, items):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise IOError("transient disk error")
+            super().put_many(items)
+
+    store = CuboidStore(spec(), backend=FlakyBackend())
+    queue = enable_write_behind(store, max_items=8)
+    block = np.full(CUBOID, 1, np.uint8)
+    store.write_cuboid(0, 0, block)
+    store.write_cuboid(0, 1, block)
+    store.flush()  # completes despite the two failed applies
+    assert queue.counters()["flush_errors"] >= 1
+    assert queue.counters()["poisoned"] == 0
+    assert queue.depth == 0
+    # the retry counters surface through PathStats
+    assert store.write_stats.queue_retries == queue.retried
+    store.close()
+    np.testing.assert_array_equal(store.read_cuboid(0, 0), block)
+
+
+def test_write_behind_poisons_persistently_failing_key(monkeypatch):
+    """One persistently failing key is quarantined; the queue keeps
+    serving every other key and flush() still completes."""
+    monkeypatch.setenv("REPRO_WB_POISON_AFTER", "3")
+    applied = {}
+
+    def put_many(items):
+        if any(k == ("bad",) for k, _ in items):
+            raise IOError("cursed key")
+        applied.update(dict(items))
+
+    queue = WriteBehindQueue(put_many, lambda k: None,
+                             max_items=8, batch_items=4)
+    queue.enqueue(("bad",), b"x")
+    queue.enqueue(("good",), b"y")
+    queue.flush(timeout=30)  # the poisoned key counts as settled
+    assert applied == {("good",): b"y"}
+    assert ("bad",) in queue.poison_keys()
+    assert queue.counters()["poisoned"] == 1
+    # the queue keeps serving after the quarantine
+    queue.enqueue(("more",), b"z")
+    queue.flush(timeout=30)
+    assert applied[("more",)] == b"z"
+    # re-enqueueing a poisoned key gives it a fresh chance (and
+    # re-poisons here, since this key never stops failing)
+    queue.enqueue(("bad",), b"x2")
+    assert ("bad",) not in queue.poison_keys()
+    queue.flush(timeout=30)
+    assert ("bad",) in queue.poison_keys()
+    assert queue.counters()["poisoned"] == 2
+    queue.close()
 
 
 def test_write_behind_close_is_idempotent_and_store_survives():
